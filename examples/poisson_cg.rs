@@ -1,0 +1,111 @@
+//! End-to-end driver: solve a 3-D Poisson problem through the FULL
+//! three-layer stack and prove all layers compose.
+//!
+//! Pipeline exercised:
+//!   L1  Pallas ELL SpMV + dot/axpy kernels (AOT artifacts)
+//!   L2  fused `cg_step` iteration graph (one HLO per CG iteration)
+//!   L3  Rust coordinator: matrix generation, format conversion, solver
+//!       drivers, stopping criteria, verification
+//!
+//! Three solve paths are compared on the same system:
+//!   1. composed CG on the `par` executor (pure Rust),
+//!   2. composed CG on the `xla` executor (every BLAS-1/SpMV a PJRT
+//!      dispatch into an AOT artifact),
+//!   3. fused CG on the `xla` executor (one `cg_step` artifact per
+//!      iteration — the L2 fusion optimization).
+//!
+//! The run (convergence + timings + launch counts) is recorded in
+//! EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::stencil;
+use sparkle::matrix::{Csr, Dense, Ell};
+use sparkle::solver::fused::FusedCg;
+use sparkle::solver::{Cg, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::Dim2;
+
+fn main() -> sparkle::Result<()> {
+    let side = 14; // 14^3 = 2744 unknowns
+    let data = stencil::stencil_3d::<f64>(side, side, side, 0.0);
+    let n = data.dim.rows;
+    println!(
+        "== end-to-end: 3-D Poisson {side}^3 ({n} unknowns, {} nnz) ==\n",
+        data.nnz()
+    );
+    let crit = Criterion::residual(1e-8, 400);
+
+    // path 1: composed CG, par executor
+    let exec = Executor::par();
+    let a = Csr::from_data(exec.clone(), &data)?;
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x1 = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let t0 = Instant::now();
+    let r1 = Cg::new(SolverConfig::with_criterion(crit.clone())).solve(&a, &b, &mut x1)?;
+    let t1 = t0.elapsed();
+    println!(
+        "par/composed : {} iters, residual {:.2e}, {:.1} ms",
+        r1.iterations,
+        r1.resnorm,
+        t1.as_secs_f64() * 1e3
+    );
+
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("artifacts/ missing -> run `make artifacts` for the XLA paths");
+        return Ok(());
+    }
+
+    // path 2: composed CG, xla executor (every op is a PJRT dispatch)
+    let xexec = Executor::xla("artifacts")?;
+    let rt = xexec.xla_runtime().unwrap().clone();
+    let ax = Csr::from_data(xexec.clone(), &data)?;
+    let bx = Dense::filled(xexec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x2 = Dense::zeros(xexec.clone(), Dim2::new(n, 1));
+    let launches0 = rt.launch_count();
+    let t0 = Instant::now();
+    let r2 = Cg::new(SolverConfig::with_criterion(crit.clone())).solve(&ax, &bx, &mut x2)?;
+    let t2 = t0.elapsed();
+    let l2 = rt.launch_count() - launches0;
+    println!(
+        "xla/composed : {} iters, residual {:.2e}, {:.1} ms, {} PJRT launches ({:.1}/iter)",
+        r2.iterations,
+        r2.resnorm,
+        t2.as_secs_f64() * 1e3,
+        l2,
+        l2 as f64 / r2.iterations.max(1) as f64
+    );
+
+    // path 3: fused cg_step artifact (the L2 fusion)
+    let ell = Ell::from_data(xexec.clone(), &data)?;
+    let mut x3 = Dense::zeros(xexec.clone(), Dim2::new(n, 1));
+    let launches0 = rt.launch_count();
+    let t0 = Instant::now();
+    let r3 = FusedCg::new(SolverConfig::with_criterion(crit)).solve(&ell, &bx, &mut x3)?;
+    let t3 = t0.elapsed();
+    let l3 = rt.launch_count() - launches0;
+    println!(
+        "xla/fused    : {} iters, residual {:.2e}, {:.1} ms, {} PJRT launches ({:.1}/iter)",
+        r3.iterations,
+        r3.resnorm,
+        t3.as_secs_f64() * 1e3,
+        l3,
+        l3 as f64 / r3.iterations.max(1) as f64
+    );
+
+    // all three must agree with each other and actually solve the system
+    for (name, x, r) in [("par", &x1, &r1), ("xla", &x2, &r2), ("fused", &x3, &r3)] {
+        assert!(r.converged, "{name} did not converge");
+        let mut resid = b.to_executor(exec.clone());
+        let a_check = Csr::from_data(exec.clone(), &data)?;
+        let x_host = x.to_executor(exec.clone());
+        a_check.apply_advanced(-1.0, &x_host, 1.0, &mut resid)?;
+        let rel = resid.norm2_host() / b.norm2_host();
+        println!("{name:>5}: true relative residual {rel:.2e}");
+        assert!(rel < 1e-7, "{name} residual too large: {rel}");
+    }
+    println!("\nall three paths converge to the same solution — L1/L2/L3 compose. OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: assemble a sparse matrix, convert formats, run SpMV on
+//! every executor, and solve a small system with CG.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (The XLA executor needs `make artifacts` once; the example skips it
+//! gracefully when artifacts are missing.)
+
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::stencil;
+use sparkle::matrix::{Coo, Csr, Dense, Ell};
+use sparkle::solver::{Cg, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::Dim2;
+
+fn main() -> sparkle::Result<()> {
+    // 1. assemble: a 2-D Poisson problem on a 32x32 grid
+    let data = stencil::laplace_2d::<f64>(32, 32);
+    let n = data.dim.rows;
+    println!("matrix: {} rows, {} nonzeros", n, data.nnz());
+
+    // 2. executors: reference (oracle), par (host threads), xla (the
+    //    AOT JAX/Pallas "ported" backend via PJRT)
+    let mut executors = vec![Executor::reference(), Executor::par()];
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        executors.push(Executor::xla("artifacts")?);
+    } else {
+        println!("(artifacts/ missing -> skipping the xla executor; run `make artifacts`)");
+    }
+
+    // 3. one SpMV per executor and format — identical numerics everywhere
+    for exec in &executors {
+        let csr = Csr::from_data(exec.clone(), &data)?;
+        let coo = Coo::from_data(exec.clone(), &data)?;
+        let ell = Ell::from_data(exec.clone(), &data)?;
+        let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        csr.apply(&b, &mut x)?;
+        let csr_norm = x.norm2_host();
+        coo.apply(&b, &mut x)?;
+        let coo_norm = x.norm2_host();
+        ell.apply(&b, &mut x)?;
+        let ell_norm = x.norm2_host();
+        println!(
+            "executor {:>9}: ||A·1|| = {csr_norm:.6} (csr) {coo_norm:.6} (coo) {ell_norm:.6} (ell)",
+            exec.name()
+        );
+        assert!((csr_norm - coo_norm).abs() < 1e-9 && (csr_norm - ell_norm).abs() < 1e-9);
+    }
+
+    // 4. solve A x = b with CG on the parallel executor
+    let exec = Executor::par();
+    let a = Csr::from_data(exec.clone(), &data)?;
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let result = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 1000)))
+        .solve(&a, &b, &mut x)?;
+    println!(
+        "CG: converged={} in {} iterations, residual {:.3e}",
+        result.converged, result.iterations, result.resnorm
+    );
+    assert!(result.converged);
+    println!("quickstart OK");
+    Ok(())
+}

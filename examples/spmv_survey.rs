@@ -1,0 +1,89 @@
+//! SpMV survey: one matrix, every format × every executor, with the
+//! device-model projection next to the host measurement — a miniature
+//! of the paper's §6.3 study runnable in seconds.
+//!
+//!     cargo run --release --example spmv_survey [suitesparse-name]
+//!
+//! The optional argument picks a Table-1 matrix (default: thermal2).
+
+use sparkle::bench_util::{f2, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::{suite, MatrixStats};
+use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::perfmodel::project::Implementation;
+use sparkle::perfmodel::{project_spmv, Device, SpmvKernelKind};
+use sparkle::vendor_mkl::VendorCsr;
+use sparkle::Dim2;
+
+fn main() -> sparkle::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "thermal2".into());
+    let entry = suite::table1_entry(&name).unwrap_or_else(|| {
+        eprintln!("unknown matrix `{name}`; available:");
+        for e in suite::table1() {
+            eprintln!("  {}", e.name);
+        }
+        std::process::exit(1);
+    });
+    let scale = 128;
+    let data = entry.generate::<f64>(scale);
+    let stats = MatrixStats::from_data(&data);
+    let full = stats.scaled_to(entry.n_full, entry.nnz_full);
+    println!(
+        "== SpMV survey: {} ({}; scaled 1/{scale}: n={}, nnz={}) ==\n",
+        entry.name, entry.origin, stats.n, stats.nnz
+    );
+
+    let mut execs = vec![Executor::reference(), Executor::par()];
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        execs.push(Executor::xla("artifacts")?);
+    }
+
+    let timer = Timer::default();
+    let flops = 2.0 * stats.nnz as f64;
+    let mut t = Table::new(&["executor", "format", "host GF/s", "||Ax||"]);
+    for exec in &execs {
+        let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+        let mut run = |fmt: &str, op: &dyn LinOp<f64>| {
+            let st = timer.run(|| op.apply(&b, &mut x).unwrap());
+            t.row(&[
+                exec.name().to_string(),
+                fmt.into(),
+                f2(st.rate_giga(flops)),
+                format!("{:.6}", x.norm2_host()),
+            ]);
+        };
+        run("csr", &Csr::from_data(exec.clone(), &data)?);
+        run("coo", &Coo::from_data(exec.clone(), &data)?);
+        if stats.max_row < 512 {
+            run("ell", &Ell::from_data(exec.clone(), &data)?);
+        }
+        if !matches!(&**exec, sparkle::Executor::Xla(_)) {
+            run("sellp", &SellP::from_data(exec.clone(), &data)?);
+            run("hybrid", &Hybrid::from_data(exec.clone(), &data)?);
+            run("vendor", &VendorCsr::new(Csr::from_data(exec.clone(), &data)?));
+        }
+    }
+    t.print();
+
+    println!("\n-- device-model projection at published size (n={}, nnz={}) --", full.n, full.nnz);
+    let mut t2 = Table::new(&["device", "precision", "csr GF/s", "coo GF/s", "vendor GF/s"]);
+    for dev in Device::INTEL {
+        let p = if dev == Device::Gen12 {
+            sparkle::Precision::Single
+        } else {
+            sparkle::Precision::Double
+        };
+        t2.row(&[
+            dev.spec().name.to_string(),
+            p.to_string(),
+            f2(project_spmv(dev, Implementation::Sparkle, SpmvKernelKind::Csr, &full, p).gflops),
+            f2(project_spmv(dev, Implementation::Sparkle, SpmvKernelKind::Coo, &full, p).gflops),
+            f2(project_spmv(dev, Implementation::Vendor, SpmvKernelKind::Csr, &full, p).gflops),
+        ]);
+    }
+    t2.print();
+    println!("\nspmv_survey OK");
+    Ok(())
+}

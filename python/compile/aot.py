@@ -1,0 +1,172 @@
+"""AOT lowering: JAX/Pallas kernels + L2 solver steps -> HLO text
+artifacts + manifest.tsv.
+
+Emits HLO *text* (NOT .serialize()): jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 Rust crate links) rejects; the HLO text parser
+reassigns ids, so text round-trips cleanly.
+
+Shape buckets must stay in sync with rust/src/runtime/bucket.rs:
+  N_BUCKETS       = powers of 4 from 2^8 to 2^20
+  K_BUCKETS       = {8, 32, 128}           (ELL widths)
+  NNZ_MULTIPLIERS = {4, 16, 64}            (COO nnz = m * n)
+
+Manifest line format: name<TAB>kernel<TAB>dtype<TAB>n<TAB>k<TAB>nnz.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--set core|all]
+`--set core` skips the stream/mixbench artifacts (faster CI runs).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 artifacts need x64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import blas1, mixbench, ref, spmv, stream  # noqa: E402
+
+N_BUCKETS = [256, 1024, 4096, 16384, 65536, 262144, 1048576]
+K_BUCKETS = [8, 32, 128]
+NNZ_MULTIPLIERS = [4, 16, 64]
+DTYPES = [("f32", jnp.float32), ("f64", jnp.float64)]
+MIXBENCH_FLOPS = [1, 4, 16, 64, 256]
+MIXBENCH_N = 65536
+
+# The largest ELL buckets are lowered but trade padding for coverage;
+# (n, k) pairs above this element count are skipped to bound artifact
+# build time and on-disk size (n * k values + indices).
+MAX_ELL_ELEMS = 32 * 1024 * 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuple_wrap(fn):
+    """Ensure the lowered function returns a tuple (uniform unpacking in
+    Rust: every artifact's result is a tuple literal)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def S(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def build_specs(which="all"):
+    """Yield (name, kernel_family, dtype_name, n, k, nnz, fn, input_specs)."""
+    specs = []
+    for dname, dt in DTYPES:
+        sc = S((), dt)
+        for n in N_BUCKETS:
+            v = S((n,), dt)
+            # BLAS-1 — argument order must match rust/src/kernels/xla.rs
+            specs.append((f"axpy_{dname}_{n}", "axpy", dname, n, 0, 0,
+                          blas1.axpy, [sc, v, v]))
+            specs.append((f"axpby_{dname}_{n}", "axpby", dname, n, 0, 0,
+                          blas1.axpby, [sc, sc, v, v]))
+            specs.append((f"scal_{dname}_{n}", "scal", dname, n, 0, 0,
+                          blas1.scal, [sc, v]))
+            specs.append((f"dot_{dname}_{n}", "dot", dname, n, 0, 0,
+                          blas1.dot, [v, v]))
+            specs.append((f"ew_mul_{dname}_{n}", "ew_mul", dname, n, 0, 0,
+                          blas1.ew_mul, [v, v]))
+            if which == "all":
+                specs.append((f"stream_copy_{dname}_{n}", "stream_copy",
+                              dname, n, 0, 0, stream.stream_copy, [v]))
+                specs.append((f"stream_mul_{dname}_{n}", "stream_mul",
+                              dname, n, 0, 0, stream.stream_mul, [sc, v]))
+                specs.append((f"stream_add_{dname}_{n}", "stream_add",
+                              dname, n, 0, 0, stream.stream_add, [v, v]))
+                specs.append((f"stream_triad_{dname}_{n}", "stream_triad",
+                              dname, n, 0, 0, stream.stream_triad, [sc, v, v]))
+                specs.append((f"stream_dot_{dname}_{n}", "stream_dot",
+                              dname, n, 0, 0, stream.stream_dot, [v, v]))
+            # ELL SpMV + fused solver steps
+            for k in K_BUCKETS:
+                if n * k > MAX_ELL_ELEMS:
+                    continue
+                vals = S((k, n), dt)
+                cols = S((k, n), jnp.int32)
+                specs.append((f"ell_adv_{dname}_{n}_{k}", "ell_adv",
+                              dname, n, k, 0, spmv.ell_spmv_advanced,
+                              [sc, vals, cols, v, sc, v]))
+                specs.append((f"cg_step_{dname}_{n}_{k}", "cg_step",
+                              dname, n, k, 0, model.cg_step,
+                              [vals, cols, v, v, v, sc]))
+                specs.append((f"bicgstab_step_{dname}_{n}_{k}",
+                              "bicgstab_step", dname, n, k, 0,
+                              model.bicgstab_step,
+                              [vals, cols, v, v, v, v, v, sc, sc, sc]))
+                specs.append((f"cgs_step_{dname}_{n}_{k}", "cgs_step",
+                              dname, n, k, 0, model.cgs_step,
+                              [vals, cols, v, v, v, v, v, sc]))
+            # COO SpMV
+            for m in NNZ_MULTIPLIERS:
+                nnz = m * n
+                if nnz > MAX_ELL_ELEMS:
+                    continue
+                cv = S((nnz,), dt)
+                ci = S((nnz,), jnp.int32)
+                specs.append((f"coo_adv_{dname}_{n}_{nnz}", "coo_adv",
+                              dname, n, 0, nnz, ref.coo_spmv_advanced,
+                              [sc, cv, ci, ci, v, sc, v]))
+        if which == "all":
+            for f in MIXBENCH_FLOPS:
+                v = S((MIXBENCH_N,), dt)
+                specs.append((
+                    f"mixbench{f}_{dname}_{MIXBENCH_N}", f"mixbench{f}",
+                    dname, MIXBENCH_N, 0, 0,
+                    lambda x, _f=f: mixbench.mixbench(x, _f), [v]))
+    return specs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--set", default="all", choices=["core", "all"])
+    parser.add_argument("--force", action="store_true",
+                        help="re-lower even if the artifact file exists")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    specs = build_specs(args.set)
+    manifest_lines = []
+    lowered_count = 0
+    for name, kernel, dname, n, k, nnz, fn, in_specs in specs:
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        manifest_lines.append(f"{name}\t{kernel}\t{dname}\t{n}\t{k}\t{nnz}")
+        if os.path.exists(path) and not args.force:
+            continue
+        lowered = jax.jit(_tuple_wrap(fn)).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        lowered_count += 1
+        if lowered_count % 25 == 0:
+            print(f"  ... {lowered_count} lowered", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"{len(specs)} artifacts registered, {lowered_count} newly lowered "
+          f"-> {args.out_dir}/manifest.tsv", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

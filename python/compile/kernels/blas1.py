@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: BLAS-1 vector operations.
+
+Each kernel tiles its vectors into `BLOCK`-element VMEM blocks and maps a
+1-D grid over them; scalars ride along as (1,)-shaped blocks broadcast to
+every grid step (the TPU analog of a kernel argument living in SMEM).
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see aot_recipe / DESIGN.md).
+
+The reduction kernel (`dot`) accumulates into a (1,)-element output block
+across sequential grid steps — the standard TPU pattern replacing the
+subgroup-reduction + atomic finale a CUDA/DPC++ dot uses (the paper §4.2
+emulates missing subgroup votes the same way, one level down).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+# Block policy (the per-backend kernel-configuration knob, §4 of the
+# paper: the same kernel source is launched with backend-tuned tiles).
+#
+# Interpret-mode grid steps carry a large fixed overhead on the CPU PJRT
+# backend (~0.4 ms/step measured — see EXPERIMENTS.md §Perf), so the CPU
+# default uses blocks up to 64 Ki elements (≤ 16 grid steps at the
+# largest bucket). For a real-TPU lowering set SPARKLE_MAX_BLOCK=1024 (or
+# smaller) so every operand tile fits VMEM with double buffering.
+MAX_BLOCK = int(os.environ.get("SPARKLE_MAX_BLOCK", 65536))
+# Kept for backward-compat in tests that import BLOCK: the minimum tile.
+BLOCK = 256
+
+
+def _block(n):
+    """Largest power-of-two block ≤ MAX_BLOCK that divides n."""
+    b = min(n, MAX_BLOCK)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _grid(n):
+    return (n // _block(n),)
+
+
+def _vec_spec_n(n):
+    b = _block(n)
+    return pl.BlockSpec((b,), lambda i: (i,))
+
+
+def _scalar_spec():
+    # one (1,) block broadcast to every grid step
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _ew_call(kernel, n, dtype, num_scalars, num_vecs):
+    """Build a pallas_call for an element-wise kernel."""
+    in_specs = [_scalar_spec()] * num_scalars + [_vec_spec_n(n)] * num_vecs
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        grid=_grid(n),
+        in_specs=in_specs,
+        out_specs=_vec_spec_n(n),
+        interpret=True,
+    )
+
+
+def axpy(alpha, x, y):
+    """y' = alpha * x + y. `alpha` is rank-0 (matches the Rust caller)."""
+
+    def kernel(a_ref, x_ref, y_ref, o_ref):
+        o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+    n = x.shape[0]
+    return _ew_call(kernel, n, x.dtype, 1, 2)(alpha.reshape((1,)), x, y)
+
+
+def axpby(alpha, beta, x, y):
+    """y' = alpha * x + beta * y."""
+
+    def kernel(a_ref, b_ref, x_ref, y_ref, o_ref):
+        o_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+    n = x.shape[0]
+    return _ew_call(kernel, n, x.dtype, 2, 2)(
+        alpha.reshape((1,)), beta.reshape((1,)), x, y
+    )
+
+
+def scal(beta, x):
+    """x' = beta * x."""
+
+    def kernel(b_ref, x_ref, o_ref):
+        o_ref[...] = b_ref[0] * x_ref[...]
+
+    n = x.shape[0]
+    return _ew_call(kernel, n, x.dtype, 1, 1)(beta.reshape((1,)), x)
+
+
+def ew_mul(x, y):
+    """z = x ⊙ y."""
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = x_ref[...] * y_ref[...]
+
+    n = x.shape[0]
+    return _ew_call(kernel, n, x.dtype, 0, 2)(x, y)
+
+
+def dot(x, y):
+    """<x, y> accumulated across grid steps into a (1,) output."""
+
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(x_ref[...] * y_ref[...]).reshape((1,))
+
+    n = x.shape[0]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        grid=_grid(n),
+        in_specs=[_vec_spec_n(n), _vec_spec_n(n)],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: mixbench-style arithmetic-intensity sweep (Fig. 7).
+
+One kernel per flops-per-element value F: each element receives F/2
+fused multiply-adds. Sweeping F moves the kernel along the roofline from
+bandwidth-bound to compute-bound — exactly what mixbench does to trace
+the experimental roofline of the paper's GPUs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.blas1 import _grid, _vec_spec_n
+
+
+def mixbench(x, flops_per_elem):
+    """y[i] = fma-chain(x[i]) with `flops_per_elem` flops per element."""
+    iters = max(1, flops_per_elem // 2)
+
+    def kernel(x_ref, o_ref):
+        s = jnp.asarray(0.999, dtype=x_ref.dtype)
+        t = jnp.asarray(0.001, dtype=x_ref.dtype)
+
+        def body(_, y):
+            return y * s + t
+
+        o_ref[...] = jax.lax.fori_loop(0, iters, body, x_ref[...])
+
+    n = x.shape[0]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=_grid(n),
+        in_specs=[_vec_spec_n(n)],
+        out_specs=_vec_spec_n(n),
+        interpret=True,
+    )(x)

@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for every L1 kernel.
+
+These are the correctness ground truth the Pallas kernels are tested
+against (pytest + hypothesis in python/tests), mirroring Ginkgo's
+`reference` backend role. No pallas, no tricks — just the textbook
+definition of each operation.
+"""
+
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- BLAS-1
+
+def axpy(alpha, x, y):
+    """y' = alpha * x + y."""
+    return alpha * x + y
+
+
+def axpby(alpha, beta, x, y):
+    """y' = alpha * x + beta * y."""
+    return alpha * x + beta * y
+
+
+def scal(beta, x):
+    """x' = beta * x."""
+    return beta * x
+
+
+def dot(x, y):
+    """<x, y> as a (1,) array (matches the Pallas accumulator shape)."""
+    return jnp.sum(x * y).reshape((1,))
+
+
+def ew_mul(x, y):
+    """Element-wise product."""
+    return x * y
+
+
+# ----------------------------------------------------------------- stream
+
+STREAM_SCALAR = 0.4
+
+
+def stream_copy(a):
+    return a
+
+
+def stream_mul(s, c):
+    return s * c
+
+
+def stream_add(a, b):
+    return a + b
+
+
+def stream_triad(s, b, c):
+    return b + s * c
+
+
+def stream_dot(a, b):
+    return jnp.sum(a * b).reshape((1,))
+
+
+# ------------------------------------------------------------------- SpMV
+
+def ell_spmv(vals, cols, x):
+    """ELL SpMV. vals/cols are (k, n) column-major ELL storage; padding
+    entries have val 0 / col 0, which contribute nothing."""
+    return jnp.sum(vals * x[cols], axis=0)
+
+
+def ell_spmv_advanced(alpha, vals, cols, b, beta, y):
+    """y' = alpha * A b + beta * y for ELL A."""
+    return alpha * ell_spmv(vals, cols, b) + beta * y
+
+
+def coo_spmv(vals, rows, cols, x, n):
+    """COO SpMV via segment-sum (the TPU substitution for the atomic
+    scatter the CUDA/DPC++ kernels use — see DESIGN.md
+    §Hardware-Adaptation)."""
+    import jax
+
+    prod = vals * x[cols]
+    return jax.ops.segment_sum(prod, rows, num_segments=n)
+
+
+def coo_spmv_advanced(alpha, vals, rows, cols, b, beta, y):
+    """y' = alpha * A b + beta * y for COO A (n taken from y)."""
+    return alpha * coo_spmv(vals, rows, cols, b, y.shape[0]) + beta * y
+
+
+def mixbench(x, flops_per_elem):
+    """mixbench-style arithmetic intensity kernel: `flops_per_elem / 2`
+    fused multiply-adds per element (2 flops each)."""
+    s = jnp.asarray(0.999, dtype=x.dtype)
+    t = jnp.asarray(0.001, dtype=x.dtype)
+    y = x
+    for _ in range(max(1, flops_per_elem // 2)):
+        y = y * s + t
+    return y

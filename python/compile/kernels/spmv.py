@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: ELL SpMV — the paper's compute hot-spot, re-thought
+for the TPU memory model.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the DPC++ kernel of
+the paper assigns a subgroup to a batch of rows, stages x through L1/SLM
+and reduces partial products with subgroup shuffles. The Pallas version
+expresses the same schedule with BlockSpecs:
+
+* the (k, n) column-major ELL arrays are tiled into (k, ROW_BLOCK) VMEM
+  blocks — one grid step per row block (the "subgroup batch");
+* the dense vector x stays resident as a whole-VMEM operand — its reuse
+  across rows is what DPC++ gets from SLM staging;
+* the per-row reduction over the k stored entries is a vectorized axis-0
+  sum — the subgroup-shuffle reduction becomes a VPU reduction.
+
+COO SpMV stays at the JAX level (`ref.coo_spmv`: gather + segment_sum).
+A scatter-add has no efficient Pallas expression on TPU (no device
+atomics); sorted-COO segment-sum is the standard substitution and lowers
+to an HLO scatter the runtime executes unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+# Rows per grid step. Lowering-time policy (see blas1.MAX_BLOCK): the CPU
+# PJRT backend pays ~0.4 ms per interpret-mode grid step, so the default
+# uses up to 64 Ki-row blocks (≤ 16 steps at the largest bucket). For a
+# real-TPU lowering set SPARKLE_MAX_BLOCK so that k × ROW_BLOCK × 8 B
+# fits VMEM with double buffering (e.g. 1024 rows at k ≤ 128 = 1 MiB
+# value tiles; EXPERIMENTS.md §Perf carries the full VMEM table).
+MAX_ROW_BLOCK = int(os.environ.get("SPARKLE_MAX_BLOCK", 65536))
+
+
+def _row_block(n):
+    b = min(n, MAX_ROW_BLOCK)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def ell_spmv(vals, cols, x):
+    """y = A x with A in (k, n) column-major ELL storage.
+
+    Padding entries carry val 0 / col 0 and therefore contribute nothing;
+    that makes the same arrays safe to pad further up to bucket shapes
+    (the Rust runtime relies on this invariant).
+    """
+    k, n = vals.shape
+
+    def kernel(v_ref, c_ref, x_ref, o_ref):
+        v = v_ref[...]          # (k, row_block) VMEM block
+        c = c_ref[...]
+        xv = x_ref[...]         # full x resident (SLM-staging analog)
+        o_ref[...] = jnp.sum(v * xv[c], axis=0)
+
+    rb = _row_block(n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        grid=(n // rb,),
+        in_specs=[
+            pl.BlockSpec((k, rb), lambda i: (0, i)),
+            pl.BlockSpec((k, rb), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        interpret=True,
+    )(vals, cols, x)
+
+
+def ell_spmv_advanced(alpha, vals, cols, b, beta, y):
+    """y' = alpha * A b + beta * y (scaling fused by XLA around the
+    Pallas SpMV core)."""
+    return alpha * ell_spmv(vals, cols, b) + beta * y

@@ -1,0 +1,82 @@
+"""L1 Pallas kernels: the five BabelStream kernels (paper Fig. 6).
+
+Same tiling scheme as blas1.py; `dot` uses the sequential-grid
+accumulator. These exist so the ported backend runs the *same* bandwidth
+benchmark the paper runs on its GPUs (the fig6 bench also runs them on
+the host executors for measured numbers).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.blas1 import _grid, _scalar_spec, _vec_spec_n
+
+
+def _call(kernel, n, dtype, num_scalars, num_vecs):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        grid=_grid(n),
+        in_specs=[_scalar_spec()] * num_scalars + [_vec_spec_n(n)] * num_vecs,
+        out_specs=_vec_spec_n(n),
+        interpret=True,
+    )
+
+
+def stream_copy(a):
+    """c = a."""
+
+    def kernel(a_ref, o_ref):
+        o_ref[...] = a_ref[...]
+
+    return _call(kernel, a.shape[0], a.dtype, 0, 1)(a)
+
+
+def stream_mul(s, c):
+    """b = s * c."""
+
+    def kernel(s_ref, c_ref, o_ref):
+        o_ref[...] = s_ref[0] * c_ref[...]
+
+    return _call(kernel, c.shape[0], c.dtype, 1, 1)(s.reshape((1,)), c)
+
+
+def stream_add(a, b):
+    """c = a + b."""
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = a_ref[...] + b_ref[...]
+
+    return _call(kernel, a.shape[0], a.dtype, 0, 2)(a, b)
+
+
+def stream_triad(s, b, c):
+    """a = b + s * c."""
+
+    def kernel(s_ref, b_ref, c_ref, o_ref):
+        o_ref[...] = b_ref[...] + s_ref[0] * c_ref[...]
+
+    return _call(kernel, b.shape[0], b.dtype, 1, 2)(s.reshape((1,)), b, c)
+
+
+def stream_dot(a, b):
+    """sum(a * b) — the one kernel with a global reduction (the paper
+    observes its bandwidth dip on both Intel GPUs)."""
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(a_ref[...] * b_ref[...]).reshape((1,))
+
+    n = a.shape[0]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), a.dtype),
+        grid=_grid(n),
+        in_specs=[_vec_spec_n(n), _vec_spec_n(n)],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,96 @@
+"""L2: fused Krylov solver iteration graphs (the paper's §5 solvers).
+
+Each `*_step` function is one full iteration of a short-recurrence Krylov
+solver operating on an ELL-stored operator, calling the L1 Pallas SpMV
+and reduction kernels. `aot.py` lowers one artifact per (solver, dtype,
+n-bucket, k-bucket); the Rust solver drivers then run whole iterations in
+a single PJRT dispatch (the fused-vs-composed tradeoff is measured by the
+`ablation_fused_step` bench).
+
+GMRES is deliberately *not* fused: its orthogonalization works against a
+growing Krylov basis, so the Rust driver composes it from BLAS-1/SpMV
+dispatches — mirroring the paper's observation (§6.4) that GMRES maps
+worst onto the ported backend and runs through workaround paths.
+
+Scalars cross the artifact boundary as rank-0 inputs and (1,)-shaped
+outputs (the Rust side reads `out[i][0]`).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import blas1, spmv
+
+
+def _dot(x, y):
+    """Pallas dot -> rank-0 scalar."""
+    return blas1.dot(x, y)[0]
+
+
+def cg_step(vals, cols, x, r, p, rr):
+    """One Conjugate Gradient iteration.
+
+    Inputs: ELL operator (vals, cols), iterate x, residual r, search
+    direction p, and rr = <r, r> carried from the previous step.
+    Returns (x', r', p', rr' as (1,)).
+    """
+    q = spmv.ell_spmv(vals, cols, p)
+    pq = _dot(p, q)
+    alpha = rr / pq
+    x1 = blas1.axpy(alpha, p, x)
+    r1 = blas1.axpy(-alpha, q, r)
+    rr1 = _dot(r1, r1)
+    beta = rr1 / rr
+    p1 = blas1.axpby(jnp.ones_like(beta), beta, r1, p)
+    return x1, r1, p1, rr1.reshape((1,))
+
+
+def bicgstab_step(vals, cols, x, r, rhat, p, v, rho_old, alpha, omega):
+    """One BiCGSTAB iteration (two SpMVs).
+
+    Returns (x', r', p', v', rho' (1,), alpha' (1,), omega' (1,)).
+    """
+    rho = _dot(rhat, r)
+    beta = (rho / rho_old) * (alpha / omega)
+    # p = r + beta * (p - omega * v)
+    pmov = blas1.axpy(-omega, v, p)
+    p1 = blas1.axpby(jnp.ones_like(beta), beta, r, pmov)
+    v1 = spmv.ell_spmv(vals, cols, p1)
+    alpha1 = rho / _dot(rhat, v1)
+    s = blas1.axpy(-alpha1, v1, r)
+    t = spmv.ell_spmv(vals, cols, s)
+    omega1 = _dot(t, s) / _dot(t, t)
+    # x = x + alpha * p + omega * s
+    x1 = blas1.axpy(alpha1, p1, x)
+    x1 = blas1.axpy(omega1, s, x1)
+    r1 = blas1.axpy(-omega1, t, s)
+    return (
+        x1,
+        r1,
+        p1,
+        v1,
+        rho.reshape((1,)),
+        alpha1.reshape((1,)),
+        omega1.reshape((1,)),
+    )
+
+
+def cgs_step(vals, cols, x, r, rhat, p, q, rho_old):
+    """One CGS iteration (two SpMVs).
+
+    Returns (x', r', p', q', rho' (1,)).
+    """
+    rho = _dot(rhat, r)
+    beta = rho / rho_old
+    u = blas1.axpy(beta, q, r)
+    # p = u + beta * (q + beta * p)
+    qbp = blas1.axpby(jnp.ones_like(beta), beta, q, p)
+    p1 = blas1.axpby(jnp.ones_like(beta), beta, u, qbp)
+    vhat = spmv.ell_spmv(vals, cols, p1)
+    sigma = _dot(rhat, vhat)
+    alpha = rho / sigma
+    q1 = blas1.axpy(-alpha, vhat, u)
+    uq = blas1.axpy(jnp.ones_like(alpha), q1, u)
+    x1 = blas1.axpy(alpha, uq, x)
+    auq = spmv.ell_spmv(vals, cols, uq)
+    r1 = blas1.axpy(-alpha, auq, r)
+    return x1, r1, p1, q1, rho.reshape((1,))

@@ -1,0 +1,17 @@
+"""Shared fixtures: x64 mode on, deterministic numpy RNG per test."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(20210319)  # the paper's date

@@ -1,0 +1,90 @@
+"""Pallas BLAS-1 kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import blas1, ref
+
+SIZES = [256, 512, 1024, 4096]
+DTYPES = [np.float32, np.float64]
+
+
+def _tol(dt):
+    return dict(rtol=1e-5, atol=1e-6) if dt == np.float32 else dict(rtol=1e-12, atol=1e-13)
+
+
+def _vec(rng, n, dt):
+    return rng.uniform(-1, 1, n).astype(dt)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_axpy_matches_ref(rng, n, dt):
+    alpha = dt(0.7)
+    x, y = _vec(rng, n, dt), _vec(rng, n, dt)
+    got = blas1.axpy(alpha, x, y)
+    assert_allclose(np.asarray(got), ref.axpy(alpha, x, y), **_tol(dt))
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_axpby_matches_ref(rng, n, dt):
+    a, b = dt(-0.3), dt(1.7)
+    x, y = _vec(rng, n, dt), _vec(rng, n, dt)
+    got = blas1.axpby(a, b, x, y)
+    assert_allclose(np.asarray(got), ref.axpby(a, b, x, y), **_tol(dt))
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_scal_and_zero(rng, dt):
+    x = _vec(rng, 512, dt)
+    assert_allclose(np.asarray(blas1.scal(dt(2.5), x)), 2.5 * x, **_tol(dt))
+    assert_allclose(np.asarray(blas1.scal(dt(0.0), x)), np.zeros_like(x))
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_dot_matches_ref(rng, n, dt):
+    x, y = _vec(rng, n, dt), _vec(rng, n, dt)
+    got = blas1.dot(x, y)
+    assert got.shape == (1,)
+    assert_allclose(np.asarray(got), ref.dot(x, y), **_tol(dt))
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ew_mul_matches_ref(rng, dt):
+    x, y = _vec(rng, 1024, dt), _vec(rng, 1024, dt)
+    assert_allclose(np.asarray(blas1.ew_mul(x, y)), x * y, **_tol(dt))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+    alpha=st.floats(min_value=-10, max_value=10, allow_nan=False),
+)
+def test_axpy_property_sweep(blocks, seed, alpha):
+    """hypothesis: any block count, any seed, any finite alpha."""
+    n = 256 * blocks
+    r = np.random.default_rng(seed)
+    x = r.standard_normal(n)
+    y = r.standard_normal(n)
+    got = blas1.axpy(np.float64(alpha), x, y)
+    assert_allclose(np.asarray(got), alpha * x + y, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dot_property_sweep(blocks, seed):
+    """hypothesis: dot accumulation across any grid length."""
+    n = 256 * blocks
+    r = np.random.default_rng(seed)
+    x = r.standard_normal(n)
+    y = r.standard_normal(n)
+    got = np.asarray(blas1.dot(x, y))[0]
+    assert np.isclose(got, np.dot(x, y), rtol=1e-11, atol=1e-11)

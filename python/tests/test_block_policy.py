@@ -1,0 +1,60 @@
+"""Block-policy coverage: the lowering-time tile-size knob must preserve
+numerics under both the CPU policy (large blocks, few grid steps) and
+the TPU policy (VMEM-sized tiles, many grid steps)."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import blas1, ref, spmv
+
+
+def test_block_divides_n():
+    for n in [256, 1024, 4096, 65536, 262144, 1048576]:
+        b = blas1._block(n)
+        assert n % b == 0, f"block {b} does not divide {n}"
+        assert b <= blas1.MAX_BLOCK or b == n
+
+
+def test_block_respects_max(monkeypatch):
+    monkeypatch.setattr(blas1, "MAX_BLOCK", 1024)
+    assert blas1._block(65536) == 1024
+    assert blas1._block(256) == 256
+    # non-power-of-two max still yields a divisor
+    monkeypatch.setattr(blas1, "MAX_BLOCK", 1000)
+    b = blas1._block(4096)
+    assert 4096 % b == 0 and b <= 1000
+
+
+@pytest.mark.parametrize("max_block", [256, 1024, 65536])
+def test_axpy_correct_under_any_policy(rng, monkeypatch, max_block):
+    monkeypatch.setattr(blas1, "MAX_BLOCK", max_block)
+    n = 4096
+    x = rng.uniform(-1, 1, n)
+    y = rng.uniform(-1, 1, n)
+    got = np.asarray(blas1.axpy(np.float64(0.7), x, y))
+    assert_allclose(got, 0.7 * x + y, rtol=1e-13)
+
+
+@pytest.mark.parametrize("max_block", [256, 4096])
+def test_dot_accumulates_across_policies(rng, monkeypatch, max_block):
+    """The sequential-grid accumulator must agree for 1 step and for
+    n/max_block steps."""
+    monkeypatch.setattr(blas1, "MAX_BLOCK", max_block)
+    n = 4096
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(n)
+    got = np.asarray(blas1.dot(x, y))[0]
+    assert np.isclose(got, np.dot(x, y), rtol=1e-12)
+
+
+@pytest.mark.parametrize("max_block", [256, 65536])
+def test_ell_spmv_correct_under_any_policy(rng, monkeypatch, max_block):
+    monkeypatch.setattr(spmv, "MAX_ROW_BLOCK", max_block)
+    n, k = 1024, 6
+    vals = rng.uniform(-1, 1, (k, n))
+    cols = rng.integers(0, n, (k, n)).astype(np.int32)
+    x = rng.uniform(-1, 1, n)
+    got = np.asarray(spmv.ell_spmv(vals, cols, x))
+    want = np.asarray(ref.ell_spmv(vals, cols, x))
+    assert_allclose(got, want, rtol=1e-12, atol=1e-12)

@@ -1,0 +1,118 @@
+"""L2 fused solver steps: one fused iteration must match a plain-numpy
+iteration of the textbook algorithm, and repeated steps must converge on
+an SPD system."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def spd_ell(rng, n, k_pad=16):
+    """Random diagonally-dominant symmetric matrix in ELL arrays + dense."""
+    dense = np.zeros((n, n))
+    for i in range(n):
+        for _ in range(2):
+            j = int(rng.integers(0, n))
+            v = rng.uniform(-0.3, 0.3)
+            dense[i, j] += v
+            dense[j, i] += v
+    dense[np.diag_indices(n)] = 0.0
+    dense += np.diag(np.abs(dense).sum(axis=1) + 1.0)
+    vals = np.zeros((k_pad, n))
+    cols = np.zeros((k_pad, n), dtype=np.int32)
+    for i in range(n):
+        nz = np.nonzero(dense[i])[0]
+        assert len(nz) <= k_pad, "increase k_pad"
+        for j, c in enumerate(nz):
+            vals[j, i] = dense[i, c]
+            cols[j, i] = c
+    return vals, cols, dense
+
+
+def test_cg_step_matches_numpy(rng):
+    n = 256
+    vals, cols, dense = spd_ell(rng, n)
+    b = rng.uniform(-1, 1, n)
+    x = np.zeros(n)
+    r = b.copy()
+    p = r.copy()
+    rr = float(r @ r)
+
+    # fused step
+    x1, r1, p1, rr1 = (np.asarray(v) for v in model.cg_step(vals, cols, x, r, p, np.float64(rr)))
+
+    # textbook step
+    q = dense @ p
+    alpha = rr / (p @ q)
+    xe = x + alpha * p
+    re = r - alpha * q
+    rre = re @ re
+    beta = rre / rr
+    pe = re + beta * p
+
+    assert_allclose(x1, xe, rtol=1e-12)
+    assert_allclose(r1, re, rtol=1e-12)
+    assert_allclose(p1, pe, rtol=1e-12)
+    assert_allclose(rr1[0], rre, rtol=1e-12)
+
+
+def test_cg_steps_converge(rng):
+    n = 256
+    vals, cols, dense = spd_ell(rng, n)
+    xs = np.linalg.solve(dense, np.ones(n))
+    x = np.zeros(n)
+    r = np.ones(n)
+    p = r.copy()
+    rr = np.float64(r @ r)
+    for _ in range(60):
+        x, r, p, rr_arr = model.cg_step(vals, cols, x, r, p, rr)
+        rr = np.asarray(rr_arr)[0]
+        if np.sqrt(rr) < 1e-10:
+            break
+    assert_allclose(np.asarray(x), xs, rtol=1e-6, atol=1e-8)
+
+
+def test_bicgstab_steps_converge(rng):
+    n = 256
+    vals, cols, dense = spd_ell(rng, n)
+    # make it nonsymmetric but still dominant
+    dense2 = dense.copy()
+    b = rng.uniform(-1, 1, n)
+    x = np.zeros(n)
+    r = b.copy()
+    rhat = r.copy()
+    p = np.zeros(n)
+    v = np.zeros(n)
+    rho = np.float64(1.0)
+    alpha = np.float64(1.0)
+    omega = np.float64(1.0)
+    for _ in range(80):
+        x, r, p, v, rho_a, alpha_a, omega_a = model.bicgstab_step(
+            vals, cols, x, r, rhat, p, v, rho, alpha, omega
+        )
+        rho = np.asarray(rho_a)[0]
+        alpha = np.asarray(alpha_a)[0]
+        omega = np.asarray(omega_a)[0]
+        if np.linalg.norm(np.asarray(r)) < 1e-10:
+            break
+    assert np.linalg.norm(dense2 @ np.asarray(x) - b) < 1e-7
+
+
+def test_cgs_steps_converge(rng):
+    n = 256
+    vals, cols, dense = spd_ell(rng, n)
+    b = rng.uniform(-1, 1, n)
+    x = np.zeros(n)
+    r = b.copy()
+    rhat = r.copy()
+    p = np.zeros(n)
+    q = np.zeros(n)
+    rho = np.float64(1.0)
+    for _ in range(80):
+        x, r, p, q, rho_a = model.cgs_step(vals, cols, x, r, rhat, p, q, rho)
+        rho = np.asarray(rho_a)[0]
+        if np.linalg.norm(np.asarray(r)) < 1e-10:
+            break
+    assert np.linalg.norm(dense @ np.asarray(x) - b) < 1e-7

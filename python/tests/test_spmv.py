@@ -1,0 +1,127 @@
+"""Pallas ELL SpMV + jnp COO SpMV vs dense ground truth."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, spmv
+
+DTYPES = [np.float32, np.float64]
+
+
+def random_ell(rng, n, k_fill, k_pad, dt):
+    """Random ELL matrix: each row gets up to k_fill entries, stored in
+    (k_pad, n) column-major arrays with val-0/col-0 padding. Returns the
+    (vals, cols) arrays and the equivalent dense matrix."""
+    vals = np.zeros((k_pad, n), dtype=dt)
+    cols = np.zeros((k_pad, n), dtype=np.int32)
+    dense = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        nnz_i = rng.integers(0, k_fill + 1)
+        cs = rng.choice(n, size=nnz_i, replace=False)
+        for j, c in enumerate(cs):
+            v = rng.uniform(-1, 1)
+            vals[j, i] = v
+            cols[j, i] = c
+            dense[i, c] += v
+    return vals, cols, dense
+
+
+@pytest.mark.parametrize("n", [256, 512])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ell_spmv_matches_dense(rng, n, dt):
+    vals, cols, dense = random_ell(rng, n, 6, 8, dt)
+    x = rng.uniform(-1, 1, n).astype(dt)
+    got = np.asarray(spmv.ell_spmv(vals, cols, x))
+    want = dense @ x.astype(np.float64)
+    tol = 1e-4 if dt == np.float32 else 1e-12
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ell_matches_ref_oracle(rng, dt):
+    vals, cols, _ = random_ell(rng, 256, 4, 8, dt)
+    x = rng.uniform(-1, 1, 256).astype(dt)
+    got = np.asarray(spmv.ell_spmv(vals, cols, x))
+    want = np.asarray(ref.ell_spmv(vals, cols, x))
+    assert_allclose(got, want, rtol=1e-6 if dt == np.float32 else 1e-14, atol=1e-6 if dt == np.float32 else 1e-14)
+
+
+def test_ell_padding_is_neutral(rng):
+    """The runtime invariant: padding rows/width with val-0/col-0 entries
+    must not change the result."""
+    n = 256
+    vals, cols, dense = random_ell(rng, n, 4, 8, np.float64)
+    x = rng.uniform(-1, 1, n)
+    base = np.asarray(spmv.ell_spmv(vals, cols, x))
+    # pad width 8 -> 32
+    vals_w = np.zeros((32, n)); vals_w[:8] = vals
+    cols_w = np.zeros((32, n), dtype=np.int32); cols_w[:8] = cols
+    padded_w = np.asarray(spmv.ell_spmv(vals_w, cols_w, x))
+    assert_allclose(padded_w, base, rtol=1e-14)
+    # pad rows n -> 2n (extra rows all padding, x padded with garbage-free 0)
+    vals_n = np.zeros((8, 2 * n)); vals_n[:, :n] = vals
+    cols_n = np.zeros((8, 2 * n), dtype=np.int32); cols_n[:, :n] = cols
+    x_n = np.concatenate([x, np.zeros(n)])
+    padded_n = np.asarray(spmv.ell_spmv(vals_n, cols_n, x_n))
+    assert_allclose(padded_n[:n], base, rtol=1e-14)
+    assert_allclose(padded_n[n:], np.zeros(n))
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ell_advanced_alpha_beta(rng, dt):
+    vals, cols, dense = random_ell(rng, 256, 4, 8, dt)
+    b = rng.uniform(-1, 1, 256).astype(dt)
+    y = rng.uniform(-1, 1, 256).astype(dt)
+    got = np.asarray(spmv.ell_spmv_advanced(dt(2.0), vals, cols, b, dt(-0.5), y))
+    want = 2.0 * (dense @ b.astype(np.float64)) - 0.5 * y.astype(np.float64)
+    tol = 1e-4 if dt == np.float32 else 1e-12
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_coo_spmv_matches_dense(rng, dt):
+    n, nnz = 200, 1500
+    rows = np.sort(rng.integers(0, n, nnz)).astype(np.int32)
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    vals = rng.uniform(-1, 1, nnz).astype(dt)
+    dense = np.zeros((n, n))
+    np.add.at(dense, (rows, cols), vals.astype(np.float64))
+    x = rng.uniform(-1, 1, n).astype(dt)
+    got = np.asarray(ref.coo_spmv(vals, rows, cols, x, n))
+    tol = 1e-4 if dt == np.float32 else 1e-12
+    assert_allclose(got, dense @ x.astype(np.float64), rtol=tol, atol=tol)
+
+
+def test_coo_padding_is_neutral(rng):
+    """Padding entries (row 0, col 0, val 0) must contribute nothing."""
+    n, nnz = 100, 400
+    rows = np.sort(rng.integers(0, n, nnz)).astype(np.int32)
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    vals = rng.uniform(-1, 1, nnz)
+    x = rng.uniform(-1, 1, n)
+    base = np.asarray(ref.coo_spmv(vals, rows, cols, x, n))
+    rows_p = np.concatenate([rows, np.zeros(50, np.int32)])
+    cols_p = np.concatenate([cols, np.zeros(50, np.int32)])
+    vals_p = np.concatenate([vals, np.zeros(50)])
+    padded = np.asarray(ref.coo_spmv(vals_p, rows_p, cols_p, x, n))
+    assert_allclose(padded, base, rtol=1e-14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_ell_property_sweep(blocks, k, seed):
+    """hypothesis: any row-block count, any stored width, any seed."""
+    n = 256 * blocks
+    r = np.random.default_rng(seed)
+    vals = r.uniform(-1, 1, (k, n))
+    cols = r.integers(0, n, (k, n)).astype(np.int32)
+    x = r.uniform(-1, 1, n)
+    got = np.asarray(spmv.ell_spmv(vals, cols, x))
+    want = np.asarray(ref.ell_spmv(vals, cols, x))
+    assert_allclose(got, want, rtol=1e-11, atol=1e-11)

@@ -1,0 +1,61 @@
+"""Pallas BabelStream kernels vs the oracle + the BabelStream self-check."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, stream
+
+DTYPES = [np.float32, np.float64]
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+@pytest.mark.parametrize("n", [256, 1024])
+def test_each_kernel_matches_ref(rng, dt, n):
+    a = rng.uniform(-1, 1, n).astype(dt)
+    b = rng.uniform(-1, 1, n).astype(dt)
+    c = rng.uniform(-1, 1, n).astype(dt)
+    s = dt(ref.STREAM_SCALAR)
+    tol = dict(rtol=1e-6, atol=1e-6) if dt == np.float32 else dict(rtol=1e-13, atol=1e-14)
+    assert_allclose(np.asarray(stream.stream_copy(a)), a)
+    assert_allclose(np.asarray(stream.stream_mul(s, c)), np.asarray(ref.stream_mul(s, c)), **tol)
+    assert_allclose(np.asarray(stream.stream_add(a, b)), a + b, **tol)
+    assert_allclose(
+        np.asarray(stream.stream_triad(s, b, c)), np.asarray(ref.stream_triad(s, b, c)), **tol
+    )
+    got = np.asarray(stream.stream_dot(a, b))
+    assert got.shape == (1,)
+    assert_allclose(got[0], np.dot(a.astype(np.float64), b.astype(np.float64)), rtol=1e-5)
+
+
+def test_babelstream_cycle_self_check():
+    """Run the BabelStream Copy->Mul->Add->Triad cycle and verify against
+    the closed-form gold values (the benchmark's own validation)."""
+    n = 512
+    a = np.full(n, 0.1)
+    b = np.full(n, 0.2)
+    c = np.zeros(n)
+    s = np.float64(ref.STREAM_SCALAR)
+    ga, gb, gc = 0.1, 0.2, 0.0
+    for _ in range(4):
+        c = np.asarray(stream.stream_copy(a))
+        b = np.asarray(stream.stream_mul(s, c))
+        c = np.asarray(stream.stream_add(a, b))
+        a = np.asarray(stream.stream_triad(s, b, c))
+        gc = ga
+        gb = ref.STREAM_SCALAR * gc
+        gc = ga + gb
+        ga = gb + ref.STREAM_SCALAR * gc
+    assert_allclose(a, np.full(n, ga), rtol=1e-13)
+    assert_allclose(b, np.full(n, gb), rtol=1e-13)
+    assert_allclose(c, np.full(n, gc), rtol=1e-13)
+
+
+def test_mixbench_flops_chain():
+    from compile.kernels import mixbench
+
+    x = np.linspace(-1, 1, 256)
+    for flops in [1, 4, 16]:
+        got = np.asarray(mixbench.mixbench(x, flops))
+        want = np.asarray(ref.mixbench(x, flops))
+        assert_allclose(got, want, rtol=1e-12)

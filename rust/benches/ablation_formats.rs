@@ -1,0 +1,101 @@
+//! Ablation: storage-format behaviour across matrix structure
+//! (the design space behind the paper's CSR-vs-COO study).
+//!
+//! Measures all five formats (CSR, COO, ELL, SELL-P, Hybrid) on the host
+//! `par` executor over a regular stencil, a moderately irregular FEM
+//! matrix and a power-law circuit, plus a SELL-P slice-size sweep.
+//! Storage overhead (padding ratio) is reported next to throughput —
+//! the ELL-blowup on circuits is the reason Ginkgo ships Hybrid.
+
+use sparkle::bench_util::{f2, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::{circuit, fem, stencil, MatrixStats};
+use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::Dim2;
+
+fn main() {
+    println!("== Ablation: sparse format × matrix structure (host measured) ==\n");
+    let exec = Executor::par();
+    let timer = Timer::default();
+
+    let cases = vec![
+        ("stencil7_32^3", stencil::stencil_3d::<f64>(32, 32, 32, 0.0)),
+        ("fem_block3", fem::fem::<f64>(12_000, 6, 3, 77)),
+        ("circuit_powerlaw", circuit::circuit::<f64>(40_000, 240_000, 78)),
+    ];
+    let mut t = Table::new(&[
+        "matrix", "format", "GF/s", "stored/nnz", "note",
+    ]);
+    for (name, data) in &cases {
+        let stats = MatrixStats::from_data(data);
+        let flops = 2.0 * stats.nnz as f64;
+        let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+
+        let csr = Csr::from_data(exec.clone(), data).unwrap();
+        let gf = timer.run(|| csr.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        t.row(&[name.to_string(), "csr".into(), f2(gf), "1.00".into(), "".into()]);
+
+        let coo = Coo::from_data(exec.clone(), data).unwrap();
+        let gf = timer.run(|| coo.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        t.row(&[name.to_string(), "coo".into(), f2(gf), "1.00".into(), "".into()]);
+
+        // ELL explodes on power-law rows: guard the memory blow-up
+        let ell_stored = stats.n * stats.max_row;
+        if ell_stored < 64_000_000 {
+            let ell = Ell::from_data(exec.clone(), data).unwrap();
+            let ratio = ell.stored_total() as f64 / stats.nnz as f64;
+            let gf = timer.run(|| ell.apply(&b, &mut x).unwrap()).rate_giga(flops);
+            t.row(&[name.to_string(), "ell".into(), f2(gf), f2(ratio), "".into()]);
+        } else {
+            t.row(&[
+                name.to_string(),
+                "ell".into(),
+                "-".into(),
+                f2(ell_stored as f64 / stats.nnz as f64),
+                "padding blow-up: skipped".into(),
+            ]);
+        }
+
+        let sellp = SellP::from_data(exec.clone(), data).unwrap();
+        let gf = timer.run(|| sellp.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        t.row(&[
+            name.to_string(),
+            "sellp".into(),
+            f2(gf),
+            f2(sellp.padding_ratio()),
+            "".into(),
+        ]);
+
+        let hybrid = Hybrid::from_data(exec.clone(), data).unwrap();
+        let gf = timer.run(|| hybrid.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        t.row(&[
+            name.to_string(),
+            "hybrid".into(),
+            f2(gf),
+            "~1".into(),
+            format!("ell width {}", hybrid.ell_part().stored_per_row()),
+        ]);
+    }
+    t.print();
+
+    println!("\n-- SELL-P slice-size sweep (circuit matrix) --");
+    let (_, data) = &cases[2];
+    let stats = MatrixStats::from_data(data);
+    let flops = 2.0 * stats.nnz as f64;
+    let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+    let mut t2 = Table::new(&["slice_size", "GF/s", "stored/nnz"]);
+    for slice in [8usize, 16, 32, 64, 128] {
+        let sellp = SellP::from_data_with_slice(exec.clone(), data, slice).unwrap();
+        let gf = timer.run(|| sellp.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        t2.row(&[slice.to_string(), f2(gf), f2(sellp.padding_ratio())]);
+    }
+    t2.print();
+    println!(
+        "\nshape check: padding ratio grows with slice size on power-law\n\
+         matrices (bigger slices absorb more of the dense row); ELL is\n\
+         unusable on circuits while SELL-P/Hybrid stay near 1x storage."
+    );
+}

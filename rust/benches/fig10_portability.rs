@@ -1,0 +1,69 @@
+//! Fig. 10 reproduction: SpMV bandwidth relative to each platform's
+//! theoretical peak — the performance-portability figure.
+//!
+//! Four panels (V100/cuda, RadeonVII/hip, GEN9/dpcpp, GEN12/dpcpp), each
+//! showing sparkle CSR, sparkle COO and the vendor-library CSR over the
+//! matrix suite; per-panel min/median/max summarize the cloud.
+
+use sparkle::bench_util::{bench_scale, f2, spmv_suite, Table};
+use sparkle::core::types::Precision;
+use sparkle::perfmodel::project::Implementation;
+use sparkle::perfmodel::{project_spmv, Device, SpmvKernelKind};
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Fig. 10: SpMV bandwidth relative to theoretical peak ==");
+    let suite = spmv_suite::<f64>(scale);
+    println!("({} matrices, scale 1/{scale})", suite.len());
+
+    let mut summary = Table::new(&[
+        "platform", "kernel", "min", "median", "max", "paper band",
+    ]);
+    for device in Device::ALL {
+        // GEN12 lacks native fp64 (§6.1): evaluated in single precision
+        let p = if device == Device::Gen12 {
+            Precision::Single
+        } else {
+            Precision::Double
+        };
+        println!("\n-- {} ({p}) --", device.spec().name);
+        let mut t = Table::new(&["matrix", "csr rel", "coo rel", "vendor rel"]);
+        let mut series: [Vec<f64>; 3] = [vec![], vec![], vec![]];
+        for m in &suite {
+            let rel = |imp, kind| project_spmv(device, imp, kind, &m.stats_full, p).relative_bw;
+            let csr = rel(Implementation::Sparkle, SpmvKernelKind::Csr);
+            let coo = rel(Implementation::Sparkle, SpmvKernelKind::Coo);
+            let ven = rel(Implementation::Vendor, SpmvKernelKind::Csr);
+            series[0].push(csr);
+            series[1].push(coo);
+            series[2].push(ven);
+            t.row(&[m.name.clone(), f2(csr), f2(coo), f2(ven)]);
+        }
+        t.print();
+        let (lo, hi) = device.spec().relative_bw_band;
+        for (i, kernel) in ["sparkle csr", "sparkle coo", "vendor csr"].iter().enumerate() {
+            summary.row(&[
+                device.spec().name.to_string(),
+                kernel.to_string(),
+                f2(series[i].iter().copied().fold(f64::MAX, f64::min)),
+                f2(median(series[i].clone())),
+                f2(series[i].iter().copied().fold(0.0, f64::max)),
+                format!("{lo:.2}-{hi:.2}"),
+            ]);
+        }
+    }
+    println!("\n== summary ==");
+    summary.print();
+    println!(
+        "\nshape check (paper §6.5): GEN12 and the CUDA-class platform sit\n\
+         high (~90% of peak for the best matrices), GEN9 and RadeonVII in\n\
+         the 60-70% band; the vendor kernel is inconsistent on GEN12 —\n\
+         above sparkle for some matrices, below for others; sparkle\n\
+         kernels are competitive with vendor kernels on every platform."
+    );
+}

@@ -1,0 +1,81 @@
+//! Fig. 7 reproduction: experimental roofline via mixbench-style
+//! arithmetic-intensity sweep, GEN9 (left) and GEN12 (right).
+//!
+//! For each flops-per-byte point the model reports the attainable
+//! GFLOP/s at double/single/half precision; the host column measures the
+//! same fma-chain kernel on this CPU (shape validation). The GEN12
+//! double column exposes the paper's headline observation: fp64
+//! emulation collapses to 8 GFLOP/s.
+
+use std::time::Instant;
+
+use sparkle::bench_util::{f2, Table};
+use sparkle::core::types::Precision;
+use sparkle::perfmodel::{Device, Roofline};
+
+/// Host fma-chain: y = y*s + t repeated `iters` times over a buffer.
+fn host_mixbench(flops_per_elem: usize, n: usize) -> f64 {
+    let iters = (flops_per_elem / 2).max(1);
+    let mut buf = vec![1.0f64; n];
+    // warmup
+    for v in buf.iter_mut() {
+        *v = *v * 0.999 + 0.001;
+    }
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        for v in buf.iter_mut() {
+            let mut y = *v;
+            for _ in 0..iters {
+                y = y * 0.999 + 0.001;
+            }
+            *v = y;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let flops = (2 * iters * n * reps) as f64;
+    flops / secs / 1e9
+}
+
+fn panel(device: Device) {
+    let spec = device.spec();
+    let roof = Roofline::new(spec.clone());
+    println!("\n-- {} --", spec.name);
+    let mut t = Table::new(&[
+        "flop/byte",
+        "f64 GF/s",
+        "f32 GF/s",
+        "f16 GF/s",
+        "host f64 GF/s",
+    ]);
+    for ai_num in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let ai = ai_num as f64 / 8.0; // flops per byte (8-byte elements)
+        t.row(&[
+            format!("{ai:.3}"),
+            f2(roof.attainable_gflops(ai, Precision::Double)),
+            f2(roof.attainable_gflops(ai, Precision::Single)),
+            f2(roof.attainable_gflops(ai, Precision::Half)),
+            f2(host_mixbench(ai_num, 1 << 18)),
+        ]);
+    }
+    t.print();
+    println!(
+        "ridge points (flop/byte): f64 {:.2}  f32 {:.2}  f16 {:.2}  | peaks {:?} GFLOP/s",
+        roof.ridge_point(Precision::Double),
+        roof.ridge_point(Precision::Single),
+        roof.ridge_point(Precision::Half),
+        spec.peak_gflops
+    );
+}
+
+fn main() {
+    println!("== Fig. 7: experimental roofline (mixbench sweep) ==");
+    panel(Device::Gen9);
+    panel(Device::Gen12);
+    println!(
+        "\nshape check: GEN9 tops out at 105/430/810 GFLOP/s (d/s/h);\n\
+         GEN12 reaches 2.2/4.0 TFLOP/s (s/h) but only 8 GFLOP/s at f64 —\n\
+         the emulated-double cliff that motivates the paper's single-\n\
+         precision evaluation on GEN12."
+    );
+}

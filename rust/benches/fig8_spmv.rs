@@ -1,0 +1,98 @@
+//! Fig. 8 reproduction: SpMV throughput over the matrix suite.
+//!
+//! Per matrix and per kernel (sparkle CSR, sparkle COO, vendor CSR):
+//!   * projected GFLOP/s on GEN9/f64 (left panel) and GEN12/f32 (right),
+//!     next to the §6.3 roofline bound for each format;
+//!   * measured GFLOP/s of the real kernels on this host's `par`
+//!     executor (validates relative format behaviour).
+//!
+//! `SPARKLE_SCALE` controls matrix sizes (default 1/64 of paper size).
+
+use sparkle::bench_util::{bench_scale, f2, spmv_suite, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::core::types::Value;
+use sparkle::matrix::{Coo, Csr, Dense};
+use sparkle::perfmodel::project::Implementation;
+use sparkle::perfmodel::{project_spmv, Device, SpmvKernelKind};
+use sparkle::vendor_mkl::VendorCsr;
+use sparkle::Dim2;
+
+fn panel<T: Value>(device: Device) {
+    let scale = bench_scale();
+    let suite = spmv_suite::<T>(scale);
+    let p = T::PRECISION;
+    println!(
+        "\n-- {} / {} ({} matrices, scale 1/{scale}) --",
+        device.spec().name,
+        p,
+        suite.len()
+    );
+    let mut t = Table::new(&[
+        "matrix",
+        "n",
+        "nnz",
+        "csr GF/s",
+        "coo GF/s",
+        "mkl GF/s",
+        "csr bound",
+        "coo bound",
+        "host csr",
+        "host coo",
+        "host mkl",
+    ]);
+    let exec = Executor::par();
+    let timer = Timer::default();
+    for m in &suite {
+        let proj = |imp, kind| project_spmv(device, imp, kind, &m.stats_full, p).gflops;
+        let csr_p = proj(Implementation::Sparkle, SpmvKernelKind::Csr);
+        let coo_p = proj(Implementation::Sparkle, SpmvKernelKind::Coo);
+        let mkl_p = proj(Implementation::Vendor, SpmvKernelKind::Csr);
+        let bound_csr =
+            project_spmv(device, Implementation::Sparkle, SpmvKernelKind::Csr, &m.stats_full, p)
+                .roofline_bound_gflops;
+        let bound_coo =
+            project_spmv(device, Implementation::Sparkle, SpmvKernelKind::Coo, &m.stats_full, p)
+                .roofline_bound_gflops;
+
+        // measured on host
+        let csr = Csr::from_data(exec.clone(), &m.data).unwrap();
+        let coo = Coo::from_data(exec.clone(), &m.data).unwrap();
+        let vendor = VendorCsr::new(csr.clone());
+        let b = Dense::filled(exec.clone(), Dim2::new(m.stats.n, 1), T::from_f64(1.0));
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(m.stats.n, 1));
+        let flops = 2.0 * m.stats.nnz as f64;
+        let host_csr = timer.run(|| csr.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        let host_coo = timer.run(|| coo.apply(&b, &mut x).unwrap()).rate_giga(flops);
+        let host_mkl = timer.run(|| vendor.apply(&b, &mut x).unwrap()).rate_giga(flops);
+
+        t.row(&[
+            m.name.clone(),
+            m.stats.n.to_string(),
+            m.stats.nnz.to_string(),
+            f2(csr_p),
+            f2(coo_p),
+            f2(mkl_p),
+            f2(bound_csr),
+            f2(bound_coo),
+            f2(host_csr),
+            f2(host_coo),
+            f2(host_mkl),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    println!("== Fig. 8: SpMV performance over the matrix suite ==");
+    // left panel: GEN9, IEEE double
+    panel::<f64>(Device::Gen9);
+    // right panel: GEN12, IEEE single
+    panel::<f32>(Device::Gen12);
+    println!(
+        "\nshape check (paper §6.3): on GEN9/f64 CSR ≈ vendor CSR ≈ 5.1 of\n\
+         6.0-bound, COO ≈ 3.8 of 4.6-bound; on GEN12/f32 all kernels near\n\
+         their 14.5/9.7 bounds with the vendor kernel inconsistent —\n\
+         winning on long regular rows, losing on irregular circuits."
+    );
+}

@@ -1,0 +1,122 @@
+//! Fig. 9 reproduction: Krylov solver throughput on the Table-1 suite.
+//!
+//! Paper protocol (§6.4): 1000 iterations after warmup, COO SpMV inside
+//! all solvers; upper panel GEN9/f64, lower GEN12/f32.
+//!
+//! Reported per (solver, matrix):
+//!   * projected GFLOP/s on the target GPU from the solver's per-
+//!     iteration flops/bytes/dispatch counts,
+//!   * measured GFLOP/s of the real solver on this host's `par`
+//!     executor (fewer iterations; throughput is iteration-count-
+//!     invariant for fixed-work solvers).
+
+use sparkle::bench_util::{bench_scale, f2, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::types::Value;
+use sparkle::matgen::{suite, MatrixStats};
+use sparkle::matrix::{Coo, Dense};
+use sparkle::perfmodel::{project_solver, Device};
+use sparkle::solver::{BiCgStab, Cg, Cgs, Gmres, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::Dim2;
+
+const MEASURED_ITERS: usize = 60;
+const PAPER_ITERS: usize = 1000;
+
+fn solvers<T: Value>() -> Vec<Box<dyn Solver<T>>> {
+    let cfg = || SolverConfig::with_criterion(Criterion::iterations(MEASURED_ITERS));
+    vec![
+        Box::new(Cg::new(cfg())),
+        Box::new(BiCgStab::new(cfg())),
+        Box::new(Cgs::new(cfg())),
+        Box::new(Gmres::new(cfg())),
+    ]
+}
+
+/// Dispatches per iteration on an accelerator backend (for the launch-
+/// overhead term of the projection): BLAS-1 + SpMV calls per iteration.
+fn dispatches(name: &str) -> u64 {
+    match name {
+        "cg" => 7,
+        "bicgstab" => 13,
+        "cgs" => 13,
+        "gmres" => 35, // avg over a restart cycle: grows with basis
+        _ => 10,
+    }
+}
+
+/// Host-side work per iteration in microseconds (Hessenberg handling and
+/// the §6.4 "workaround" penalty for GMRES on the ported backend).
+fn host_work_us(name: &str) -> f64 {
+    if name == "gmres" {
+        60.0
+    } else {
+        0.0
+    }
+}
+
+fn panel<T: Value>(device: Device) {
+    let scale = bench_scale();
+    let p = T::PRECISION;
+    println!("\n-- {} / {} (scale 1/{scale}, {PAPER_ITERS} paper-iterations) --",
+             device.spec().name, p);
+    let mut t = Table::new(&[
+        "matrix", "solver", "proj GF/s", "host GF/s", "host iters/s",
+    ]);
+    let exec = Executor::par();
+    for entry in suite::table1() {
+        let data = entry.generate::<T>(scale);
+        let stats = MatrixStats::from_data(&data);
+        // device projections run at the *published* dimensions; the host
+        // measurement below runs the scaled analog
+        let full = stats.scaled_to(entry.n_full, entry.nnz_full);
+        let a = Coo::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), T::from_f64(1.0));
+        for solver in solvers::<T>() {
+            let flops = solver.flops_per_iter(full.nnz, full.n);
+            let bytes = solver.bytes_per_iter(full.nnz, full.n, p.bytes());
+            let (proj_gf, _ms) = project_solver(
+                device,
+                flops,
+                bytes,
+                dispatches(solver.name()),
+                host_work_us(solver.name()),
+                p,
+                PAPER_ITERS,
+            );
+            // measured host run (one timed pass; solvers are expensive)
+            let timer = Timer::new(0, 1);
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+            let mut iters_done = 0usize;
+            let st = timer.run(|| {
+                let r = solver.solve(&a, &b, &mut x).unwrap();
+                iters_done = r.iterations.max(1);
+            });
+            let host_flops = solver.flops_per_iter(stats.nnz, stats.n);
+            let host_gf = (host_flops as f64 * iters_done as f64) / st.mean / 1e9;
+            t.row(&[
+                entry.name.to_string(),
+                solver.name().to_string(),
+                f2(proj_gf),
+                f2(host_gf),
+                f2(iters_done as f64 / st.mean),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn main() {
+    println!("== Fig. 9: Krylov solver performance (COO SpMV) ==");
+    // upper panel: GEN9, double
+    panel::<f64>(Device::Gen9);
+    // lower panel: GEN12, single
+    panel::<f32>(Device::Gen12);
+    println!(
+        "\nshape check (paper §6.4): GEN9 solvers land between ~1.5 and\n\
+         ~2.5 GFLOP/s, GEN12 between ~5 and ~9 GFLOP/s; the three short-\n\
+         recurrence solvers cluster per matrix while GMRES trails\n\
+         (Hessenberg handling + workaround paths); per-matrix spread\n\
+         exceeds per-solver spread."
+    );
+}

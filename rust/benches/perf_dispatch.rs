@@ -1,0 +1,51 @@
+//! Perf regression bench: XLA-executor dispatch costs (the L3 hot path).
+//!
+//! Measures per-call wallclock of the ported backend's kernels across
+//! sizes, separating fixed dispatch cost (PJRT launch + literal
+//! marshalling + pad/copy) from size-dependent work. Used by the §Perf
+//! iteration log in EXPERIMENTS.md.
+
+use sparkle::bench_util::{Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::kernels::blas;
+use sparkle::matgen::suite;
+use sparkle::matrix::{Csr, Dense, Ell};
+use sparkle::Dim2;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("artifacts/ not built — run `make artifacts` first");
+        return;
+    }
+    let exec = Executor::xla("artifacts").unwrap();
+    let timer = Timer::new(3, 20);
+
+    println!("== perf: XLA dispatch costs ==\n");
+    let mut t = Table::new(&["op", "n", "us/call"]);
+    for n in [256usize, 1024, 16384, 262144] {
+        let x = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0f64);
+        let mut y = Dense::filled(exec.clone(), Dim2::new(n, 1), 2.0f64);
+        let st = timer.run(|| blas::axpy(&exec, 0.5, &x, &mut y).unwrap());
+        t.row(&["axpy".into(), n.to_string(), format!("{:.1}", st.mean * 1e6)]);
+        let st = timer.run(|| {
+            blas::dot(&exec, &x, &y).unwrap();
+        });
+        t.row(&["dot".into(), n.to_string(), format!("{:.1}", st.mean * 1e6)]);
+    }
+    t.print();
+
+    println!("\n-- SpMV per-apply cost (thermal2 analog, scale 1/64) --");
+    let data = suite::table1_entry("thermal2").unwrap().generate::<f64>(64);
+    let n = data.dim.rows;
+    let csr = Csr::from_data(exec.clone(), &data).unwrap();
+    let ell = Ell::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let mut t2 = Table::new(&["format", "ms/apply"]);
+    let st = timer.run(|| csr.apply(&b, &mut x).unwrap());
+    t2.row(&["csr (row-expand + coo_adv)".into(), format!("{:.3}", st.mean * 1e3)]);
+    let st = timer.run(|| ell.apply(&b, &mut x).unwrap());
+    t2.row(&["ell (pallas artifact)".into(), format!("{:.3}", st.mean * 1e3)]);
+    t2.print();
+}

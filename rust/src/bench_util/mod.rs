@@ -1,0 +1,28 @@
+//! Benchmark harness utilities (hand-rolled: the offline vendor set has
+//! no criterion). Each bench binary under `rust/benches/` uses these to
+//! time kernels and print paper-style tables.
+
+mod spmv_suite;
+mod stats;
+mod table;
+mod timer;
+
+pub use spmv_suite::{spmv_suite, SuiteMatrix};
+pub use stats::Stats;
+pub use table::{f2, Table};
+pub use timer::{time_secs, Timer};
+
+/// Benchmark scale divisor: matrices are generated at `1/scale` of the
+/// paper's published dimensions. Override with `SPARKLE_SCALE=<n>`;
+/// `SPARKLE_SCALE=1` reproduces full-size structures (needs tens of GB
+/// and hours on a laptop — the default keeps `make bench` minutes-scale).
+pub fn bench_scale() -> usize {
+    std::env::var("SPARKLE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Repetitions for measured kernels (paper: 2 warmup + 10 timed, §6.3).
+pub const WARMUP: usize = 2;
+pub const REPS: usize = 10;

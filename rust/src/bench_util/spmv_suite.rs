@@ -1,0 +1,133 @@
+//! The SpMV benchmark suite for Fig. 8 / Fig. 10.
+//!
+//! The paper benchmarks "the test matrices of the SuiteSparse Matrix
+//! Collection" — hundreds of points per plot. The substitute suite spans
+//! the same structural axes: all ten Table-1 analogs plus sweeps over
+//! size, density, and irregularity per generator class, ~30 matrices.
+
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::matgen::{circuit, fem, kkt, porous, stencil, suite, MatrixStats};
+
+/// One suite matrix: name + assembly data + structure stats.
+pub struct SuiteMatrix<T> {
+    pub name: String,
+    pub data: MatrixData<T>,
+    /// Stats of the generated (scaled) matrix — what host runs measure.
+    pub stats: MatrixStats,
+    /// Stats rescaled to paper-size dimensions — what the device model
+    /// projects (the paper benchmarks full-size matrices).
+    pub stats_full: MatrixStats,
+}
+
+fn push_scaled<T: Value>(
+    out: &mut Vec<SuiteMatrix<T>>,
+    name: impl Into<String>,
+    data: MatrixData<T>,
+    scale: usize,
+) {
+    let stats = MatrixStats::from_data(&data);
+    let stats_full = stats.scaled_to(stats.n * scale, stats.nnz * scale);
+    out.push(SuiteMatrix {
+        name: name.into(),
+        data,
+        stats,
+        stats_full,
+    });
+}
+
+/// Build the suite at `1/scale` of paper-size dimensions.
+pub fn spmv_suite<T: Value>(scale: usize) -> Vec<SuiteMatrix<T>> {
+    let scale = scale.max(1);
+    let mut out = Vec::new();
+    // the ten Table-1 analogs (full-size stats = the published dims)
+    for entry in suite::table1() {
+        let data = entry.generate::<T>(scale);
+        let stats = MatrixStats::from_data(&data);
+        let stats_full = stats.scaled_to(entry.n_full, entry.nnz_full);
+        out.push(SuiteMatrix {
+            name: entry.name.into(),
+            data,
+            stats,
+            stats_full,
+        });
+    }
+    // size sweep: 2-D Laplacians from 16k to 1M rows (scaled, deduped)
+    let mut seen_sides = std::collections::HashSet::new();
+    for side in [128usize, 256, 512, 1024] {
+        let s = (side / (scale as f64).sqrt().max(1.0) as usize).max(32);
+        if seen_sides.insert(s) {
+            push_scaled(&mut out, format!("laplace2d_{s}x{s}"), stencil::laplace_2d::<T>(s, s), scale);
+        }
+    }
+    // density sweep: 3-D stencils 7pt vs 27pt
+    let side3 = (96 / (scale as f64).cbrt().max(1.0) as usize).max(8);
+    push_scaled(
+        &mut out,
+        format!("stencil7_{side3}^3"),
+        stencil::stencil_3d::<T>(side3, side3, side3, 0.0),
+        scale,
+    );
+    push_scaled(
+        &mut out,
+        format!("stencil27_{side3}^3"),
+        stencil::stencil_27pt::<T>(side3, side3, side3),
+        scale,
+    );
+    // irregularity sweep: circuits with increasing hub weight
+    let nc = (2_000_000 / scale).max(4096);
+    for (i, (tag, hub_fraction)) in [("lo", 0.0002f64), ("mid", 0.002), ("hi", 0.01)]
+        .into_iter()
+        .enumerate()
+    {
+        push_scaled(
+            &mut out,
+            format!("circuit_{tag}"),
+            circuit::circuit_with_config::<T>(
+                nc,
+                nc * 6,
+                100 + i as u64,
+                &circuit::CircuitConfig {
+                    hub_fraction,
+                    ..Default::default()
+                },
+            ),
+            scale,
+        );
+    }
+    // FEM block-size sweep (1 / 3 dofs per node)
+    let nodes = (500_000 / scale).max(2048);
+    push_scaled(&mut out, "fem_scalar", fem::fem::<T>(nodes, 6, 1, 201), scale);
+    push_scaled(&mut out, "fem_block3", fem::fem::<T>(nodes / 3, 6, 3, 202), scale);
+    // saddle-point + heterogeneous flow
+    push_scaled(&mut out, "kkt_small", kkt::kkt::<T>((600_000 / scale).max(3072), 12, 0.5, 203), scale);
+    let sp = (64 / (scale as f64).cbrt().max(1.0) as usize).max(8);
+    push_scaled(
+        &mut out,
+        format!("porous_{sp}^3"),
+        porous::porous_flow::<T>(sp, sp, sp, 4.0, 204),
+        scale,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_breadth() {
+        let s = spmv_suite::<f64>(512);
+        assert!(s.len() >= 20, "suite size {}", s.len());
+        // spans regular and irregular structures
+        let max_cv = s.iter().map(|m| m.stats.row_cv).fold(0.0, f64::max);
+        let min_cv = s.iter().map(|m| m.stats.row_cv).fold(f64::MAX, f64::min);
+        assert!(max_cv > 1.0, "no irregular matrices (max cv {max_cv})");
+        assert!(min_cv < 0.1, "no regular matrices (min cv {min_cv})");
+        // all valid
+        for m in &s {
+            m.data.validate().unwrap();
+            assert!(m.stats.nnz > 0, "{} empty", m.name);
+        }
+    }
+}

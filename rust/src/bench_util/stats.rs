@@ -1,0 +1,63 @@
+//! Summary statistics over timing samples.
+
+/// Min/median/mean/max of a sample set (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute from raw samples. Panics on empty input.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Stats::from_samples(empty)");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Stats {
+            min: sorted[0],
+            median,
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Derived throughput for `units` of work per run (e.g. bytes ->
+    /// GB/s, flops -> GFLOP/s), using the mean time as the paper does.
+    pub fn rate_giga(&self, units: f64) -> f64 {
+        units / self.mean / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        let s = Stats::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn even_median() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn rates() {
+        let s = Stats::from_samples(&[0.5]);
+        assert_eq!(s.rate_giga(1e9), 2.0); // 1 G-unit in 0.5s = 2 G/s
+    }
+}

@@ -1,0 +1,65 @@
+//! Wallclock timing with warmup, mirroring the paper's methodology
+//! (§6.3: average of 10 repetitions after 2 warmup launches).
+
+use std::time::Instant;
+
+use crate::bench_util::stats::Stats;
+
+/// Time `f` once, in seconds.
+pub fn time_secs(mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Repetition timer.
+pub struct Timer {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self {
+            warmup: crate::bench_util::WARMUP,
+            reps: crate::bench_util::REPS,
+        }
+    }
+}
+
+impl Timer {
+    /// Explicit warmup/reps.
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Self { warmup, reps }
+    }
+
+    /// Run `f` warmup+reps times; return timing stats over the reps.
+    pub fn run(&self, mut f: impl FnMut()) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let samples: Vec<f64> = (0..self.reps.max(1)).map(|_| time_secs(&mut f)).collect();
+        Stats::from_samples(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_counts_calls() {
+        let mut calls = 0usize;
+        let t = Timer::new(2, 5);
+        let stats = t.run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert!(stats.mean >= 0.0);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn time_secs_positive() {
+        let s = time_secs(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(s >= 0.002);
+    }
+}

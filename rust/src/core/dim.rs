@@ -1,0 +1,68 @@
+//! Two-dimensional size descriptor (Ginkgo's `dim<2>`).
+
+use std::fmt;
+
+/// Rows × columns of a linear operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Dim2 {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Dim2 {
+    /// Construct a rows × cols dimension.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// Square dimension n × n.
+    pub fn square(n: usize) -> Self {
+        Self { rows: n, cols: n }
+    }
+
+    /// Total number of entries a dense operator of this dim would hold.
+    pub fn count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True if rows == cols.
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Transposed dimension.
+    pub fn transposed(&self) -> Self {
+        Self {
+            rows: self.cols,
+            cols: self.rows,
+        }
+    }
+}
+
+impl fmt::Display for Dim2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let d = Dim2::new(3, 4);
+        assert_eq!(d.rows, 3);
+        assert_eq!(d.cols, 4);
+        assert_eq!(d.count(), 12);
+        assert!(!d.is_square());
+        assert!(Dim2::square(5).is_square());
+    }
+
+    #[test]
+    fn transpose_and_display() {
+        let d = Dim2::new(3, 4);
+        assert_eq!(d.transposed(), Dim2::new(4, 3));
+        assert_eq!(d.to_string(), "3x4");
+    }
+}

@@ -1,0 +1,77 @@
+//! Error type shared across the library.
+
+/// Library-wide error type.
+///
+/// Mirrors Ginkgo's exception hierarchy (`DimensionMismatch`,
+/// `NotSupported`, `KernelNotFound`, ...) flattened into one enum.
+#[derive(Debug, thiserror::Error)]
+pub enum SparkleError {
+    /// Operand dimensions do not conform (e.g. SpMV with wrong vector size).
+    #[error("dimension mismatch in {op}: {detail}")]
+    DimensionMismatch { op: &'static str, detail: String },
+
+    /// The requested kernel/operation is not implemented for this executor.
+    #[error("operation `{op}` is not supported on executor `{exec}`")]
+    NotSupported { op: &'static str, exec: &'static str },
+
+    /// Malformed sparse structure (unsorted, out-of-bounds index, ...).
+    #[error("invalid matrix structure: {0}")]
+    InvalidStructure(String),
+
+    /// Artifact missing / shape outside every bucket / PJRT failure.
+    #[error("xla runtime: {0}")]
+    Runtime(String),
+
+    /// I/O and parse failures (MatrixMarket, manifests).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Parse failure with location context.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Solver failed to meet its stopping criterion budget.
+    #[error("solver `{solver}` did not converge in {iters} iterations (residual {resnorm:.3e})")]
+    NotConverged {
+        solver: &'static str,
+        iters: usize,
+        resnorm: f64,
+    },
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, SparkleError>;
+
+impl SparkleError {
+    /// Helper for dimension mismatch errors.
+    pub fn dim(op: &'static str, detail: impl Into<String>) -> Self {
+        SparkleError::DimensionMismatch {
+            op,
+            detail: detail.into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = SparkleError::dim("spmv", "A is 4x4, b is 3");
+        assert!(e.to_string().contains("spmv"));
+        assert!(e.to_string().contains("4x4"));
+        let e = SparkleError::NotSupported {
+            op: "half_precision",
+            exec: "reference",
+        };
+        assert!(e.to_string().contains("half_precision"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: SparkleError = io.into();
+        assert!(matches!(e, SparkleError::Io(_)));
+    }
+}

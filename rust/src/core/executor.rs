@@ -1,0 +1,276 @@
+//! Executors: where kernels run.
+//!
+//! Mirrors Ginkgo's executor model (§2 of the paper): the executor is the
+//! "handle" controlling kernel execution and memory, and switching the
+//! executor switches the backend implementation of every operation at
+//! runtime. The sparkle analogs are:
+//!
+//! | Ginkgo        | sparkle            | implementation                         |
+//! |---------------|--------------------|----------------------------------------|
+//! | `reference`   | [`Executor::Reference`] | sequential Rust kernels (oracle)  |
+//! | `omp`         | [`Executor::Par`]  | multithreaded Rust (std scoped threads) |
+//! | `dpcpp` (new) | [`Executor::Xla`]  | AOT JAX/Pallas HLO via PJRT — the "ported backend" this paper is about |
+//!
+//! The CUDA/HIP backends of the paper exist only inside the performance
+//! model (`perfmodel`), since no NVIDIA/AMD hardware is attached.
+
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::runtime::XlaRuntime;
+
+/// Configuration of the parallel (OpenMP-analog) executor.
+#[derive(Debug, Clone)]
+pub struct ParConfig {
+    /// Number of worker threads; `0` = one per available core.
+    pub threads: usize,
+    /// Rows below this size run sequentially (parallel overhead guard).
+    pub seq_threshold: usize,
+}
+
+impl Default for ParConfig {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            seq_threshold: 4096,
+        }
+    }
+}
+
+impl ParConfig {
+    /// Effective number of threads.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+/// An execution backend. Every matrix/vector object and every solver holds
+/// an `Arc<Executor>`; kernels dispatch on the variant.
+pub enum Executor {
+    /// Sequential reference kernels — correctness oracle for everything.
+    Reference,
+    /// Multithreaded host kernels (the `omp` analog).
+    Par(ParConfig),
+    /// The ported accelerator backend: AOT-compiled JAX/Pallas artifacts
+    /// executed through the PJRT C API (the `dpcpp` analog).
+    Xla(XlaExec),
+}
+
+/// State of the XLA executor.
+pub struct XlaExec {
+    /// Shared PJRT runtime + compile cache.
+    pub runtime: Arc<XlaRuntime>,
+}
+
+impl Executor {
+    /// Sequential reference executor.
+    pub fn reference() -> Arc<Self> {
+        Arc::new(Executor::Reference)
+    }
+
+    /// Parallel host executor with default configuration.
+    pub fn par() -> Arc<Self> {
+        Arc::new(Executor::Par(ParConfig::default()))
+    }
+
+    /// Parallel host executor with an explicit thread count.
+    pub fn par_with_threads(threads: usize) -> Arc<Self> {
+        Arc::new(Executor::Par(ParConfig {
+            threads,
+            ..ParConfig::default()
+        }))
+    }
+
+    /// XLA executor reading artifacts from `artifact_dir`.
+    pub fn xla(artifact_dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
+        let runtime = Arc::new(XlaRuntime::new(artifact_dir)?);
+        Ok(Arc::new(Executor::Xla(XlaExec { runtime })))
+    }
+
+    /// XLA executor sharing an existing runtime.
+    pub fn xla_with_runtime(runtime: Arc<XlaRuntime>) -> Arc<Self> {
+        Arc::new(Executor::Xla(XlaExec { runtime }))
+    }
+
+    /// Short name used in logs and benchmark tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Reference => "reference",
+            Executor::Par(_) => "par",
+            Executor::Xla(_) => "xla",
+        }
+    }
+
+    /// Access the XLA runtime if this is an XLA executor.
+    pub fn xla_runtime(&self) -> Option<&Arc<XlaRuntime>> {
+        match self {
+            Executor::Xla(x) => Some(&x.runtime),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executor::{}", self.name())
+    }
+}
+
+/// Split `len` items into per-thread chunks and run `body(thread_id,
+/// start, end)` on scoped threads. The workhorse of every `par` kernel.
+///
+/// `body` must be safe to run concurrently on disjoint `[start, end)`
+/// ranges; kernels achieve this by splitting output rows.
+pub fn par_for<F>(cfg: &ParConfig, len: usize, body: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = cfg.effective_threads().max(1);
+    if len == 0 {
+        return;
+    }
+    if threads == 1 || len <= cfg.seq_threshold {
+        body(0, 0, len);
+        return;
+    }
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(t, start, end));
+        }
+    });
+}
+
+/// Per-thread partial reduction: runs `body(start, end) -> acc` on scoped
+/// threads and combines the partials with `combine`.
+pub fn par_reduce<A, F, C>(cfg: &ParConfig, len: usize, identity: A, body: F, combine: C) -> A
+where
+    A: Send,
+    F: Fn(usize, usize) -> A + Sync,
+    C: Fn(A, A) -> A,
+{
+    let threads = cfg.effective_threads().max(1);
+    if len == 0 {
+        return identity;
+    }
+    if threads == 1 || len <= cfg.seq_threshold {
+        return combine(identity, body(0, len));
+    }
+    let chunk = len.div_ceil(threads);
+    let partials = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .filter_map(|t| {
+                let start = t * chunk;
+                let end = ((t + 1) * chunk).min(len);
+                if start >= end {
+                    return None;
+                }
+                let body = &body;
+                Some(s.spawn(move || body(start, end)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_reduce worker panicked"))
+            .collect::<Vec<_>>()
+    });
+    partials.into_iter().fold(identity, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(Executor::reference().name(), "reference");
+        assert_eq!(Executor::par().name(), "par");
+    }
+
+    #[test]
+    fn par_config_threads() {
+        assert_eq!(
+            ParConfig {
+                threads: 3,
+                ..Default::default()
+            }
+            .effective_threads(),
+            3
+        );
+        assert!(ParConfig::default().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn par_for_covers_range_exactly_once() {
+        let cfg = ParConfig {
+            threads: 4,
+            seq_threshold: 0,
+        };
+        let n = 1000;
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        par_for(&cfg, n, |_, start, end| {
+            for i in start..end {
+                hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+        assert!(hits
+            .iter()
+            .all(|h| h.load(std::sync::atomic::Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_for_empty_and_small() {
+        let cfg = ParConfig::default();
+        par_for(&cfg, 0, |_, _, _| panic!("must not be called"));
+        let seen = std::sync::atomic::AtomicBool::new(false);
+        par_for(
+            &ParConfig {
+                threads: 1,
+                seq_threshold: 10,
+            },
+            5,
+            |_, s, e| {
+                assert_eq!((s, e), (0, 5));
+                seen.store(true, std::sync::atomic::Ordering::Relaxed);
+            },
+        );
+        assert!(seen.load(std::sync::atomic::Ordering::Relaxed));
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let cfg = ParConfig {
+            threads: 8,
+            seq_threshold: 0,
+        };
+        let n = 12345usize;
+        let total = par_reduce(
+            &cfg,
+            n,
+            0u64,
+            |s, e| (s..e).map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_reduce_empty() {
+        let cfg = ParConfig::default();
+        let r = par_reduce(&cfg, 0, 7i64, |_, _| panic!(), |a, b| a + b);
+        assert_eq!(r, 7);
+    }
+}

@@ -1,0 +1,72 @@
+//! The linear operator abstraction (Ginkgo's `LinOp`).
+//!
+//! Everything that can be applied to a vector — sparse matrices in any
+//! format, preconditioners, and generated solvers — implements [`LinOp`].
+//! This is the "generic algorithm skeletons in core, kernels in backends"
+//! design of the paper's Figure 1.
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+
+/// A linear operator `A : R^cols -> R^rows`.
+///
+/// Not `Send`/`Sync`: the XLA executor wraps the PJRT client which is
+/// reference-counted non-atomically inside the `xla` crate. Parallelism
+/// lives *inside* kernels (scoped threads over data slices), never by
+/// sharing operators across threads.
+pub trait LinOp<T: Value> {
+    /// Operator dimensions.
+    fn shape(&self) -> Dim2;
+
+    /// Executor the operator's kernels run on.
+    fn executor(&self) -> &Arc<Executor>;
+
+    /// x = A · b
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()>;
+
+    /// x = alpha · A · b + beta · x  (Ginkgo's `apply(alpha, b, beta, x)`).
+    ///
+    /// Default implementation composes `apply` with BLAS-1; formats
+    /// override it with a fused kernel.
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        let exec = self.executor().clone();
+        let mut tmp = Dense::zeros(exec, x.shape());
+        self.apply(b, &mut tmp)?;
+        crate::kernels::blas::scal(self.executor(), beta, x)?;
+        crate::kernels::blas::axpy(self.executor(), alpha, &tmp, x)?;
+        Ok(())
+    }
+
+    /// Human-readable operator name for logs and benches.
+    fn op_name(&self) -> &'static str {
+        "linop"
+    }
+
+    /// Validate that `b`, `x` conform with this operator.
+    fn check_conformant(&self, b: &Dense<T>, x: &Dense<T>) -> Result<()> {
+        let dim = self.shape();
+        if b.shape().rows != dim.cols || x.shape().rows != dim.rows {
+            return Err(SparkleError::dim(
+                "apply",
+                format!(
+                    "A is {}, b is {}, x is {}",
+                    dim,
+                    b.shape(),
+                    x.shape()
+                ),
+            ));
+        }
+        if b.shape().cols != x.shape().cols {
+            return Err(SparkleError::dim(
+                "apply",
+                format!("b has {} rhs, x has {}", b.shape().cols, x.shape().cols),
+            ));
+        }
+        Ok(())
+    }
+}

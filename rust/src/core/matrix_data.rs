@@ -1,0 +1,324 @@
+//! Device-agnostic sparse assembly container (Ginkgo's `matrix_data`).
+//!
+//! All matrix generators and the MatrixMarket reader produce a
+//! [`MatrixData`]; every concrete format (`Coo`, `Csr`, `Ell`, ...) is
+//! constructed *from* it. This is the single point where structure is
+//! validated, sorted and deduplicated.
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::types::{IndexType, Value};
+
+/// One nonzero entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry<T> {
+    pub row: IndexType,
+    pub col: IndexType,
+    pub val: T,
+}
+
+/// Sparse matrix in assembly (triplet) form.
+#[derive(Debug, Clone, Default)]
+pub struct MatrixData<T> {
+    pub dim: Dim2,
+    /// Entries; use [`MatrixData::normalize`] to sort + combine duplicates.
+    pub entries: Vec<Entry<T>>,
+}
+
+impl<T: Value> MatrixData<T> {
+    /// Empty container of the given dimension.
+    pub fn new(dim: Dim2) -> Self {
+        Self {
+            dim,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Build from parallel triplet slices.
+    pub fn from_triplets(
+        dim: Dim2,
+        rows: &[IndexType],
+        cols: &[IndexType],
+        vals: &[T],
+    ) -> Result<Self> {
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            return Err(SparkleError::InvalidStructure(format!(
+                "triplet arrays disagree: rows={} cols={} vals={}",
+                rows.len(),
+                cols.len(),
+                vals.len()
+            )));
+        }
+        let mut data = Self::new(dim);
+        data.entries.reserve(rows.len());
+        for i in 0..rows.len() {
+            data.push(rows[i], cols[i], vals[i]);
+        }
+        data.validate()?;
+        Ok(data)
+    }
+
+    /// Append one entry (no validation until [`MatrixData::validate`]).
+    pub fn push(&mut self, row: IndexType, col: IndexType, val: T) {
+        self.entries.push(Entry { row, col, val });
+    }
+
+    /// Number of stored entries (before dedup this may over-count).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Check all indices are in-bounds.
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.entries {
+            if e.row < 0
+                || e.col < 0
+                || e.row as usize >= self.dim.rows
+                || e.col as usize >= self.dim.cols
+            {
+                return Err(SparkleError::InvalidStructure(format!(
+                    "entry ({}, {}) out of bounds for {}",
+                    e.row, e.col, self.dim
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort row-major and sum duplicate coordinates. Zero entries produced
+    /// by cancellation are kept (Ginkgo keeps explicit zeros too).
+    pub fn normalize(&mut self) {
+        self.entries
+            .sort_unstable_by_key(|e| (e.row, e.col));
+        let mut out: Vec<Entry<T>> = Vec::with_capacity(self.entries.len());
+        for e in self.entries.drain(..) {
+            match out.last_mut() {
+                Some(last) if last.row == e.row && last.col == e.col => {
+                    last.val += e.val;
+                }
+                _ => out.push(e),
+            }
+        }
+        self.entries = out;
+    }
+
+    /// True if sorted row-major with unique coordinates.
+    pub fn is_normalized(&self) -> bool {
+        self.entries
+            .windows(2)
+            .all(|w| (w[0].row, w[0].col) < (w[1].row, w[1].col))
+    }
+
+    /// Number of nonzeros per row (requires in-bounds entries).
+    pub fn row_lengths(&self) -> Vec<usize> {
+        let mut lens = vec![0usize; self.dim.rows];
+        for e in &self.entries {
+            lens[e.row as usize] += 1;
+        }
+        lens
+    }
+
+    /// Longest row.
+    pub fn max_row_length(&self) -> usize {
+        self.row_lengths().into_iter().max().unwrap_or(0)
+    }
+
+    /// Make structurally symmetric by inserting the transposed pattern
+    /// (values averaged). Used by generators for FEM-like matrices.
+    pub fn symmetrize(&mut self) {
+        let mut extra = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            if e.row != e.col {
+                extra.push(Entry {
+                    row: e.col,
+                    col: e.row,
+                    val: e.val,
+                });
+            }
+        }
+        self.entries.extend(extra);
+        self.normalize();
+        // average the summed off-diagonal pairs
+        for e in &mut self.entries {
+            if e.row != e.col {
+                e.val = e.val * T::from_f64(0.5);
+            }
+        }
+    }
+
+    /// Add `shift` to every diagonal entry, inserting missing diagonals.
+    /// Generators use this to force diagonal dominance (solver-friendly).
+    pub fn shift_diagonal(&mut self, shift: T) {
+        let n = self.dim.rows.min(self.dim.cols);
+        let mut present = vec![false; n];
+        for e in &mut self.entries {
+            if e.row == e.col {
+                e.val += shift;
+                present[e.row as usize] = true;
+            }
+        }
+        for (i, has) in present.iter().enumerate() {
+            if !has {
+                self.push(i as IndexType, i as IndexType, shift);
+            }
+        }
+        self.normalize();
+    }
+
+    /// Transposed copy (rows and columns swapped, re-normalized).
+    pub fn transpose(&self) -> MatrixData<T> {
+        let mut out = MatrixData::new(self.dim.transposed());
+        out.entries.reserve(self.entries.len());
+        for e in &self.entries {
+            out.push(e.col, e.row, e.val);
+        }
+        out.normalize();
+        out
+    }
+
+    /// Convert values to another precision.
+    pub fn convert<U: Value>(&self) -> MatrixData<U> {
+        MatrixData {
+            dim: self.dim,
+            entries: self
+                .entries
+                .iter()
+                .map(|e| Entry {
+                    row: e.row,
+                    col: e.col,
+                    val: U::from_f64(e.val.as_f64()),
+                })
+                .collect(),
+        }
+    }
+
+    /// Dense row-major materialization — only for tests / tiny matrices.
+    pub fn to_dense_vec(&self) -> Vec<T> {
+        let mut out = vec![T::zero(); self.dim.count()];
+        for e in &self.entries {
+            out[e.row as usize * self.dim.cols + e.col as usize] += e.val;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MatrixData<f64> {
+        // [[2, 1, 0],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        MatrixData::from_triplets(
+            Dim2::square(3),
+            &[0, 0, 1, 2, 2],
+            &[0, 1, 1, 0, 2],
+            &[2.0, 1.0, 3.0, 4.0, 5.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_triplets_and_dense() {
+        let d = sample();
+        assert_eq!(d.nnz(), 5);
+        assert_eq!(
+            d.to_dense_vec(),
+            vec![2.0, 1.0, 0.0, 0.0, 3.0, 0.0, 4.0, 0.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn mismatched_triplets_rejected() {
+        let r = MatrixData::<f64>::from_triplets(Dim2::square(2), &[0], &[0, 1], &[1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let r = MatrixData::from_triplets(Dim2::square(2), &[0, 5], &[0, 0], &[1.0, 1.0]);
+        assert!(r.is_err());
+        let r = MatrixData::from_triplets(Dim2::square(2), &[0, -1], &[0, 0], &[1.0, 1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn normalize_sorts_and_sums_duplicates() {
+        let mut d = MatrixData::new(Dim2::square(2));
+        d.push(1, 1, 5.0);
+        d.push(0, 0, 1.0);
+        d.push(1, 1, 2.0);
+        assert!(!d.is_normalized());
+        d.normalize();
+        assert!(d.is_normalized());
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.entries[1].val, 7.0);
+    }
+
+    #[test]
+    fn row_lengths_and_max() {
+        let d = sample();
+        assert_eq!(d.row_lengths(), vec![2, 1, 2]);
+        assert_eq!(d.max_row_length(), 2);
+    }
+
+    #[test]
+    fn symmetrize_makes_pattern_symmetric() {
+        let mut d = sample();
+        d.symmetrize();
+        let dense = d.to_dense_vec();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(dense[i * 3 + j], dense[j * 3 + i], "({i},{j})");
+            }
+        }
+        // (0,1) had 1.0, (1,0) had 0 -> both become 0.5
+        assert_eq!(dense[1], 0.5);
+    }
+
+    #[test]
+    fn shift_diagonal_inserts_missing() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(2));
+        d.push(0, 1, 1.0);
+        d.shift_diagonal(10.0);
+        let dense = d.to_dense_vec();
+        assert_eq!(dense, vec![10.0, 1.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn transpose_swaps_image() {
+        let d = sample();
+        let t = d.transpose();
+        assert_eq!(t.dim, d.dim.transposed());
+        let dd = d.to_dense_vec();
+        let td = t.to_dense_vec();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(dd[i * 3 + j], td[j * 3 + i]);
+            }
+        }
+        // double transpose is identity
+        assert_eq!(t.transpose().to_dense_vec(), dd);
+    }
+
+    #[test]
+    fn transpose_rectangular() {
+        let mut d = MatrixData::<f64>::new(Dim2::new(2, 4));
+        d.push(0, 3, 5.0);
+        d.push(1, 0, -1.0);
+        let t = d.transpose();
+        assert_eq!(t.dim, Dim2::new(4, 2));
+        let td = t.to_dense_vec();
+        assert_eq!(td[3 * 2], 5.0); // (3,0)
+        assert_eq!(td[1], -1.0); // (0,1)
+    }
+
+    #[test]
+    fn precision_conversion() {
+        let d = sample();
+        let s: MatrixData<f32> = d.convert();
+        assert_eq!(s.entries[0].val, 2.0f32);
+        assert_eq!(s.dim, d.dim);
+    }
+}

@@ -1,0 +1,9 @@
+//! Core abstractions: types, executors, dimensions, assembly data, and
+//! the `LinOp` interface (the "core" library of the paper's Figure 1).
+
+pub mod dim;
+pub mod error;
+pub mod executor;
+pub mod linop;
+pub mod matrix_data;
+pub mod types;

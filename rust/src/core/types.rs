@@ -1,0 +1,164 @@
+//! Scalar value types supported by the library.
+//!
+//! The paper evaluates IEEE 754 double precision (GEN9) and single
+//! precision (GEN12, which lacks native fp64). `Value` abstracts the two
+//! so every format / kernel / solver is generic over precision, mirroring
+//! Ginkgo's `ValueType` template parameter.
+
+use std::fmt::{Debug, Display};
+
+/// Index type used in all sparse structures (Ginkgo's `IndexType=int32`).
+///
+/// 32-bit indices match what both Ginkgo and oneMKL use on GPUs and what
+/// the AOT kernel artifacts expect (`int32` columns/rows).
+pub type IndexType = i32;
+
+/// Precision tag, used by the performance model and artifact naming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE 754 binary64.
+    Double,
+    /// IEEE 754 binary32.
+    Single,
+    /// IEEE 754 binary16 — only used by the roofline model (Fig. 7);
+    /// no kernels are instantiated at half precision.
+    Half,
+}
+
+impl Precision {
+    /// Size of one scalar in bytes.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Double => 8,
+            Precision::Single => 4,
+            Precision::Half => 2,
+        }
+    }
+
+    /// Short name used in artifact files and benchmark tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Double => "f64",
+            Precision::Single => "f32",
+            Precision::Half => "f16",
+        }
+    }
+}
+
+impl Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scalar type every format/kernel/solver is generic over.
+///
+/// `xla::ArrayElement` lets the runtime move values into device-resident
+/// PJRT buffers directly (the zero-re-marshalling SpMV path).
+pub trait Value:
+    num_traits::Float
+    + num_traits::NumAssign
+    + xla::ArrayElement
+    + Debug
+    + Display
+    + Default
+    + Copy
+    + Send
+    + Sync
+    + 'static
+{
+    /// Precision tag for this type.
+    const PRECISION: Precision;
+
+    /// Lossless widen to f64 (named `as_f64` to avoid colliding with num_traits::ToPrimitive) (for residual norms, statistics, projections).
+    fn as_f64(self) -> f64;
+    /// Narrowing conversion from f64.
+    fn from_f64(v: f64) -> Self;
+
+    /// Build an XLA literal from a slice of this type.
+    fn literal_vec(v: &[Self]) -> xla::Literal;
+    /// Read an XLA literal back into a vec of this type.
+    fn literal_to_vec(l: &xla::Literal) -> std::result::Result<Vec<Self>, xla::Error>;
+
+    /// Relative tolerance appropriate for comparisons at this precision.
+    fn cmp_tol() -> f64 {
+        match Self::PRECISION {
+            Precision::Double => 1e-12,
+            Precision::Single => 1e-5,
+            Precision::Half => 1e-2,
+        }
+    }
+}
+
+impl Value for f64 {
+    const PRECISION: Precision = Precision::Double;
+
+    fn as_f64(self) -> f64 {
+        self
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn literal_vec(v: &[Self]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+    fn literal_to_vec(l: &xla::Literal) -> std::result::Result<Vec<Self>, xla::Error> {
+        l.to_vec::<f64>()
+    }
+}
+
+impl Value for f32 {
+    const PRECISION: Precision = Precision::Single;
+
+    fn as_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn literal_vec(v: &[Self]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+    fn literal_to_vec(l: &xla::Literal) -> std::result::Result<Vec<Self>, xla::Error> {
+        l.to_vec::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Double.bytes(), 8);
+        assert_eq!(Precision::Single.bytes(), 4);
+        assert_eq!(Precision::Half.bytes(), 2);
+    }
+
+    #[test]
+    fn precision_names() {
+        assert_eq!(Precision::Double.name(), "f64");
+        assert_eq!(f32::PRECISION.name(), "f32");
+        assert_eq!(f64::PRECISION, Precision::Double);
+    }
+
+    #[test]
+    fn round_trip_f64() {
+        assert_eq!(f64::from_f64(2.5).as_f64(), 2.5);
+        assert_eq!(f32::from_f64(2.5).as_f64(), 2.5);
+    }
+
+    #[test]
+    fn generic_sum() {
+        fn sum<T: Value>(v: &[T]) -> T {
+            v.iter().fold(T::zero(), |a, &b| a + b)
+        }
+        assert_eq!(sum(&[1.0f32, 2.0, 3.0]), 6.0);
+        assert_eq!(sum(&[1.0f64, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn tolerances_ordered() {
+        assert!(f64::cmp_tol() < f32::cmp_tol());
+    }
+}

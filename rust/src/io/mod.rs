@@ -1,0 +1,5 @@
+//! File I/O: MatrixMarket exchange format.
+
+mod matrix_market;
+
+pub use matrix_market::{read_matrix_market, read_matrix_market_str, write_matrix_market};

@@ -1,0 +1,127 @@
+//! BLAS-1 dispatch: one entry point per operation, switching on the
+//! executor (the paper's `operations` class, §2).
+
+use std::sync::Arc;
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::types::Value;
+use crate::kernels::{par, reference, xla};
+use crate::matrix::dense::Dense;
+
+fn check_same_len<T: Value>(op: &'static str, x: &Dense<T>, y: &Dense<T>) -> Result<()> {
+    if x.shape() != y.shape() {
+        return Err(SparkleError::dim(
+            op,
+            format!("{} vs {}", x.shape(), y.shape()),
+        ));
+    }
+    Ok(())
+}
+
+/// y += alpha * x.
+pub fn axpy<T: Value>(exec: &Arc<Executor>, alpha: T, x: &Dense<T>, y: &mut Dense<T>) -> Result<()> {
+    check_same_len("axpy", x, y)?;
+    match &**exec {
+        Executor::Reference => reference::axpy(alpha, x.as_slice(), y.as_mut_slice()),
+        Executor::Par(cfg) => par::axpy(cfg, alpha, x.as_slice(), y.as_mut_slice()),
+        Executor::Xla(e) => xla::axpy(&e.runtime, alpha, x.as_slice(), y.as_mut_slice())?,
+    }
+    Ok(())
+}
+
+/// y = alpha * x + beta * y.
+pub fn axpby<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    x: &Dense<T>,
+    beta: T,
+    y: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("axpby", x, y)?;
+    match &**exec {
+        Executor::Reference => reference::axpby(alpha, x.as_slice(), beta, y.as_mut_slice()),
+        Executor::Par(cfg) => par::axpby(cfg, alpha, x.as_slice(), beta, y.as_mut_slice()),
+        Executor::Xla(e) => xla::axpby(&e.runtime, alpha, x.as_slice(), beta, y.as_mut_slice())?,
+    }
+    Ok(())
+}
+
+/// x *= beta.
+pub fn scal<T: Value>(exec: &Arc<Executor>, beta: T, x: &mut Dense<T>) -> Result<()> {
+    match &**exec {
+        Executor::Reference => reference::scal(beta, x.as_mut_slice()),
+        Executor::Par(cfg) => par::scal(cfg, beta, x.as_mut_slice()),
+        Executor::Xla(e) => xla::scal(&e.runtime, beta, x.as_mut_slice())?,
+    }
+    Ok(())
+}
+
+/// Dot product of two equally-shaped dense objects (flattened).
+pub fn dot<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result<T> {
+    check_same_len("dot", x, y)?;
+    Ok(match &**exec {
+        Executor::Reference => reference::dot(x.as_slice(), y.as_slice()),
+        Executor::Par(cfg) => par::dot(cfg, x.as_slice(), y.as_slice()),
+        Executor::Xla(e) => xla::dot(&e.runtime, x.as_slice(), y.as_slice())?,
+    })
+}
+
+/// Euclidean norm.
+pub fn norm2<T: Value>(exec: &Arc<Executor>, x: &Dense<T>) -> Result<T> {
+    Ok(match &**exec {
+        Executor::Reference => reference::norm2(x.as_slice()),
+        Executor::Par(cfg) => par::norm2(cfg, x.as_slice()),
+        Executor::Xla(e) => xla::norm2(&e.runtime, x.as_slice())?,
+    })
+}
+
+/// z = x ⊙ y (element-wise product).
+pub fn ew_mul<T: Value>(
+    exec: &Arc<Executor>,
+    x: &Dense<T>,
+    y: &Dense<T>,
+    z: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("ew_mul", x, y)?;
+    check_same_len("ew_mul", x, z)?;
+    match &**exec {
+        Executor::Reference => reference::ew_mul(x.as_slice(), y.as_slice(), z.as_mut_slice()),
+        Executor::Par(cfg) => par::ew_mul(cfg, x.as_slice(), y.as_slice(), z.as_mut_slice()),
+        Executor::Xla(e) => {
+            xla::ew_mul(&e.runtime, x.as_slice(), y.as_slice(), z.as_mut_slice())?
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+
+    #[test]
+    fn dispatch_reference_and_par_agree() {
+        for exec in [Executor::reference(), Executor::par_with_threads(3)] {
+            let x = Dense::vector(exec.clone(), &[1.0f64, 2.0, 3.0]);
+            let mut y = Dense::vector(exec.clone(), &[1.0f64, 1.0, 1.0]);
+            axpy(&exec, 2.0, &x, &mut y).unwrap();
+            assert_eq!(y.as_slice(), &[3.0, 5.0, 7.0], "exec {}", exec.name());
+            assert_eq!(dot(&exec, &x, &x).unwrap(), 14.0);
+            assert!((norm2(&exec, &x).unwrap() - 14.0f64.sqrt()).abs() < 1e-14);
+            scal(&exec, 0.5, &mut y).unwrap();
+            assert_eq!(y.as_slice(), &[1.5, 2.5, 3.5]);
+            axpby(&exec, 1.0, &x, -1.0, &mut y).unwrap();
+            assert_eq!(y.as_slice(), &[-0.5, -0.5, -0.5]);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let exec = Executor::reference();
+        let x = Dense::vector(exec.clone(), &[1.0f64, 2.0]);
+        let mut y = Dense::<f64>::zeros(exec.clone(), Dim2::new(3, 1));
+        assert!(axpy(&exec, 1.0, &x, &mut y).is_err());
+        assert!(dot(&exec, &x, &y).is_err());
+    }
+}

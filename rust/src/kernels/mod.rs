@@ -1,0 +1,15 @@
+//! Kernel layer: per-executor implementations behind a common dispatch
+//! surface (the paper's Figure 1 "core ↔ backends" split).
+//!
+//! `blas` and `spmv` hold the dispatch functions every format/solver
+//! calls; `reference`, `par` and `xla` hold the three backend
+//! implementations. The reference backend is the correctness oracle —
+//! `par` and `xla` are tested against it on random inputs.
+
+pub mod blas;
+pub mod par;
+pub(crate) mod ptr;
+pub mod reference;
+pub mod spmv;
+pub mod stream;
+pub mod xla;

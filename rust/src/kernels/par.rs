@@ -1,0 +1,352 @@
+//! Multithreaded host kernels (Ginkgo's `omp` backend analog).
+//!
+//! Parallelization strategy mirrors the OpenMP kernels of the paper's
+//! library: BLAS-1 splits the index space, row-based SpMV splits output
+//! rows (no atomics needed), COO splits the nonzero range on *row
+//! boundaries* so each thread owns disjoint output rows.
+//!
+//! All kernels work on raw slices: matrix/vector structs contain an
+//! `Arc<Executor>` (non-`Sync` because of the PJRT client), so the
+//! dispatch layer unpacks them before entering scoped threads.
+
+use crate::core::executor::{par_for, par_reduce, ParConfig};
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::reference;
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::dense::Dense;
+use crate::matrix::ell::Ell;
+use crate::matrix::sellp::SellP;
+
+use crate::kernels::ptr::SlicePtr;
+
+// ---------------------------------------------------------------- BLAS-1
+
+/// y += alpha * x, split across threads.
+pub fn axpy<T: Value>(cfg: &ParConfig, alpha: T, x: &[T], y: &mut [T]) {
+    let ptr = SlicePtr(y.as_mut_ptr());
+    par_for(cfg, x.len(), |_, s, e| {
+        // SAFETY: [s, e) ranges are disjoint across threads.
+        let y = unsafe { ptr.range(s, e - s) };
+        reference::axpy(alpha, &x[s..e], y);
+    });
+}
+
+/// y = alpha * x + beta * y.
+pub fn axpby<T: Value>(cfg: &ParConfig, alpha: T, x: &[T], beta: T, y: &mut [T]) {
+    let ptr = SlicePtr(y.as_mut_ptr());
+    par_for(cfg, x.len(), |_, s, e| {
+        let y = unsafe { ptr.range(s, e - s) };
+        reference::axpby(alpha, &x[s..e], beta, y);
+    });
+}
+
+/// x *= beta.
+pub fn scal<T: Value>(cfg: &ParConfig, beta: T, x: &mut [T]) {
+    let n = x.len();
+    let ptr = SlicePtr(x.as_mut_ptr());
+    par_for(cfg, n, |_, s, e| {
+        let x = unsafe { ptr.range(s, e - s) };
+        reference::scal(beta, x);
+    });
+}
+
+/// Dot product (per-thread partials combined in thread order, so the
+/// result is deterministic for a fixed thread count).
+pub fn dot<T: Value>(cfg: &ParConfig, x: &[T], y: &[T]) -> T {
+    par_reduce(
+        cfg,
+        x.len(),
+        T::zero(),
+        |s, e| reference::dot(&x[s..e], &y[s..e]),
+        |a, b| a + b,
+    )
+}
+
+/// Euclidean norm.
+pub fn norm2<T: Value>(cfg: &ParConfig, x: &[T]) -> T {
+    dot(cfg, x, x).sqrt()
+}
+
+/// z = x ⊙ y.
+pub fn ew_mul<T: Value>(cfg: &ParConfig, x: &[T], y: &[T], z: &mut [T]) {
+    let ptr = SlicePtr(z.as_mut_ptr());
+    par_for(cfg, x.len(), |_, s, e| {
+        let z = unsafe { ptr.range(s, e - s) };
+        reference::ew_mul(&x[s..e], &y[s..e], z);
+    });
+}
+
+// ------------------------------------------------------------------ SpMV
+
+/// CSR SpMV, rows split across threads.
+pub fn csr_spmv_advanced<T: Value>(
+    cfg: &ParConfig,
+    alpha: T,
+    a: &Csr<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) {
+    let nrhs = b.shape().cols;
+    let nrows = a.shape().rows;
+    let row_ptrs = a.row_ptrs();
+    let col_idxs = a.col_idxs();
+    let values = a.values();
+    let bs = b.as_slice();
+    let xptr = SlicePtr(x.as_mut_slice().as_mut_ptr());
+    par_for(cfg, nrows, |_, rs, re| {
+        for i in rs..re {
+            for c in 0..nrhs {
+                let mut acc = T::zero();
+                for k in row_ptrs[i] as usize..row_ptrs[i + 1] as usize {
+                    acc += values[k] * bs[col_idxs[k] as usize * nrhs + c];
+                }
+                // SAFETY: row ranges are disjoint across threads.
+                let xv = unsafe { xptr.at(i * nrhs + c) };
+                *xv = if beta.is_zero() {
+                    alpha * acc
+                } else {
+                    alpha * acc + beta * *xv
+                };
+            }
+        }
+    });
+}
+
+/// COO SpMV (x = alpha A b + beta x), nnz split on row boundaries.
+pub fn coo_spmv_advanced<T: Value>(
+    cfg: &ParConfig,
+    alpha: T,
+    a: &Coo<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) {
+    scal(cfg, beta, x.as_mut_slice());
+    let nnz = a.nnz();
+    if nnz == 0 {
+        return;
+    }
+    let nrhs = b.shape().cols;
+    let rows = a.row_idxs();
+    let cols = a.col_idxs();
+    let vals = a.values();
+    let bs = b.as_slice();
+    let threads = cfg.effective_threads().max(1);
+    // Split [0, nnz) into ranges aligned to row boundaries: thread t owns
+    // entries [starts[t], starts[t+1]) and therefore disjoint output rows.
+    let chunk = nnz.div_ceil(threads);
+    let mut starts = Vec::with_capacity(threads + 1);
+    starts.push(0usize);
+    for t in 1..threads {
+        let mut pos = (t * chunk).min(nnz);
+        // advance to the first entry of the next row so rows never split
+        while pos < nnz && pos > 0 && rows[pos] == rows[pos - 1] {
+            pos += 1;
+        }
+        let pos = pos.max(*starts.last().unwrap());
+        starts.push(pos);
+    }
+    starts.push(nnz);
+    let xptr = SlicePtr(x.as_mut_slice().as_mut_ptr());
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let (lo, hi) = (starts[t], starts[t + 1]);
+            if lo >= hi {
+                continue;
+            }
+            let xptr = &xptr;
+            s.spawn(move || {
+                for idx in lo..hi {
+                    let r = rows[idx] as usize;
+                    let v = alpha * vals[idx];
+                    for j in 0..nrhs {
+                        // SAFETY: row ranges are disjoint across threads
+                        // (chunk boundaries aligned to row changes).
+                        let xv = unsafe { xptr.at(r * nrhs + j) };
+                        *xv += v * bs[cols[idx] as usize * nrhs + j];
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// ELL SpMV, rows split across threads.
+pub fn ell_spmv<T: Value>(cfg: &ParConfig, a: &Ell<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let k = a.stored_per_row();
+    let cols = a.col_idxs();
+    let vals = a.values();
+    let bs = b.as_slice();
+    let xptr = SlicePtr(x.as_mut_slice().as_mut_ptr());
+    par_for(cfg, n, |_, rs, re| {
+        for i in rs..re {
+            for c in 0..nrhs {
+                let mut acc = T::zero();
+                for j in 0..k {
+                    let pos = j * n + i;
+                    acc += vals[pos] * bs[cols[pos] as usize * nrhs + c];
+                }
+                let xv = unsafe { xptr.at(i * nrhs + c) };
+                *xv = acc;
+            }
+        }
+    });
+}
+
+/// SELL-P SpMV, slices split across threads.
+pub fn sellp_spmv<T: Value>(cfg: &ParConfig, a: &SellP<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let ss = a.slice_size();
+    let bs = b.as_slice();
+    let slice_lengths = &a.slice_lengths;
+    let slice_sets = &a.slice_sets;
+    let cols = &a.col_idxs;
+    let vals = &a.values;
+    let xptr = SlicePtr(x.as_mut_slice().as_mut_ptr());
+    par_for(cfg, a.num_slices(), |_, s0, s1| {
+        for s in s0..s1 {
+            let width = slice_lengths[s];
+            let base = slice_sets[s];
+            for r in 0..ss {
+                let i = s * ss + r;
+                if i >= n {
+                    break;
+                }
+                for c in 0..nrhs {
+                    let mut acc = T::zero();
+                    for j in 0..width {
+                        let pos = base + j * ss + r;
+                        acc += vals[pos] * bs[cols[pos] as usize * nrhs + c];
+                    }
+                    let xv = unsafe { xptr.at(i * nrhs + c) };
+                    *xv = acc;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+    use crate::core::executor::Executor;
+    use crate::core::matrix_data::MatrixData;
+    use crate::testing::prng::Prng;
+
+    fn cfg() -> ParConfig {
+        ParConfig {
+            threads: 4,
+            seq_threshold: 8, // force the parallel path in tests
+        }
+    }
+
+    #[test]
+    fn blas1_matches_reference() {
+        let mut rng = Prng::new(42);
+        let n = 1000;
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut y1: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut y2 = y1.clone();
+        axpy(&cfg(), 0.7, &x, &mut y1);
+        reference::axpy(0.7, &x, &mut y2);
+        assert_eq!(y1, y2);
+        axpby(&cfg(), -0.3, &x, 1.1, &mut y1);
+        reference::axpby(-0.3, &x, 1.1, &mut y2);
+        assert_eq!(y1, y2);
+        let d1 = dot(&cfg(), &x, &y1);
+        let d2 = reference::dot(&x, &y2);
+        assert!((d1 - d2).abs() < 1e-9 * d2.abs().max(1.0));
+        let mut z1 = vec![0.0f64; n];
+        let mut z2 = vec![0.0f64; n];
+        ew_mul(&cfg(), &x, &y1, &mut z1);
+        reference::ew_mul(&x, &y2, &mut z2);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn coo_row_boundary_split_correct() {
+        // matrix with one huge row to stress boundary alignment
+        let mut rng = Prng::new(7);
+        let n = 64;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for j in 0..n {
+            data.push(3, j as i32, rng.uniform(-1.0, 1.0));
+        }
+        for i in 0..n {
+            data.push(i as i32, i as i32, 1.0);
+        }
+        data.normalize();
+        let a = Coo::from_data(Executor::reference(), &data).unwrap();
+        let bv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = Dense::vector(Executor::reference(), &bv);
+        let mut x1 = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        let mut x2 = x1.clone();
+        coo_spmv_advanced(&cfg(), 1.0, &a, 0.0, &b, &mut x1);
+        reference::coo_spmv_advanced(1.0, &a, 0.0, &b, &mut x2);
+        for i in 0..n {
+            assert!(
+                (x1.as_slice()[i] - x2.as_slice()[i]).abs() < 1e-12,
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn csr_matches_reference_random() {
+        let mut rng = Prng::new(123);
+        let n = 200;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            for _ in 0..rng.below(8) {
+                data.push(i as i32, rng.below(n) as i32, rng.uniform(-1.0, 1.0));
+            }
+            data.push(i as i32, i as i32, 2.0);
+        }
+        data.normalize();
+        let a = Csr::from_data(Executor::reference(), &data).unwrap();
+        let bv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = Dense::vector(Executor::reference(), &bv);
+        let mut x1 = Dense::vector(Executor::reference(), &vec![1.0; n]);
+        let mut x2 = x1.clone();
+        csr_spmv_advanced(&cfg(), 2.0, &a, -0.5, &b, &mut x1);
+        reference::csr_spmv_advanced(2.0, &a, -0.5, &b, &mut x2);
+        for i in 0..n {
+            assert!((x1.as_slice()[i] - x2.as_slice()[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ell_and_sellp_match_reference() {
+        let mut rng = Prng::new(55);
+        let n = 150;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            for _ in 0..(1 + rng.below(6)) {
+                data.push(i as i32, rng.below(n) as i32, rng.uniform(-1.0, 1.0));
+            }
+        }
+        data.normalize();
+        let bv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = Dense::vector(Executor::reference(), &bv);
+
+        let ell = Ell::from_data(Executor::reference(), &data).unwrap();
+        let mut x1 = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        let mut x2 = x1.clone();
+        ell_spmv(&cfg(), &ell, &b, &mut x1);
+        reference::ell_spmv(&ell, &b, &mut x2);
+        assert_eq!(x1.as_slice(), x2.as_slice());
+
+        let sellp = SellP::from_data_with_slice(Executor::reference(), &data, 16).unwrap();
+        let mut x3 = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        sellp_spmv(&cfg(), &sellp, &b, &mut x3);
+        reference::sellp_spmv(&sellp, &b, &mut x2);
+        assert_eq!(x3.as_slice(), x2.as_slice());
+    }
+}

@@ -1,0 +1,22 @@
+//! Shared-pointer shim for scoped-thread kernels.
+
+/// Wrap a raw mutable pointer so disjoint ranges can be written from
+/// scoped threads. Safety rests on the caller handing each thread a
+/// disjoint index range.
+pub(crate) struct SlicePtr<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SlicePtr<T> {}
+unsafe impl<T> Sync for SlicePtr<T> {}
+
+impl<T> SlicePtr<T> {
+    /// # Safety
+    /// `start..start+len` must be in-bounds and disjoint across threads.
+    pub(crate) unsafe fn range(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+
+    /// # Safety
+    /// `idx` must be in-bounds and not written by any other thread.
+    pub(crate) unsafe fn at(&self, idx: usize) -> &mut T {
+        &mut *self.0.add(idx)
+    }
+}

@@ -1,0 +1,256 @@
+//! Sequential reference kernels (Ginkgo's `reference` backend).
+//!
+//! Deliberately simple: these define the semantics every other backend is
+//! validated against. No blocking, no threading, no reordering beyond the
+//! storage order — floating-point results are bit-deterministic.
+
+use crate::core::linop::LinOp;
+use crate::core::types::{IndexType, Value};
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::dense::Dense;
+use crate::matrix::ell::Ell;
+use crate::matrix::sellp::SellP;
+
+// ---------------------------------------------------------------- BLAS-1
+
+/// y += alpha * x (element-wise over the whole buffer).
+pub fn axpy<T: Value>(alpha: T, x: &[T], y: &mut [T]) {
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = alpha * x + beta * y. `beta == 0` overwrites (no NaN propagation).
+pub fn axpby<T: Value>(alpha: T, x: &[T], beta: T, y: &mut [T]) {
+    if beta.is_zero() {
+        for i in 0..x.len() {
+            y[i] = alpha * x[i];
+        }
+    } else {
+        for i in 0..x.len() {
+            y[i] = alpha * x[i] + beta * y[i];
+        }
+    }
+}
+
+/// x *= beta; `beta == 0` fills with zero (Ginkgo semantics).
+pub fn scal<T: Value>(beta: T, x: &mut [T]) {
+    if beta.is_zero() {
+        x.fill(T::zero());
+    } else {
+        for v in x.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Dot product over the whole buffer.
+pub fn dot<T: Value>(x: &[T], y: &[T]) -> T {
+    let mut acc = T::zero();
+    for i in 0..x.len() {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// Euclidean norm.
+pub fn norm2<T: Value>(x: &[T]) -> T {
+    dot(x, x).sqrt()
+}
+
+/// z = x ⊙ y (element-wise product; Jacobi preconditioner apply).
+pub fn ew_mul<T: Value>(x: &[T], y: &[T], z: &mut [T]) {
+    for i in 0..x.len() {
+        z[i] = x[i] * y[i];
+    }
+}
+
+// ------------------------------------------------------------------ SpMV
+
+/// CSR SpMV: x = A b (multi-rhs aware).
+pub fn csr_spmv<T: Value>(a: &Csr<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    csr_spmv_advanced(T::one(), a, T::zero(), b, x);
+}
+
+/// CSR SpMV: x = alpha A b + beta x.
+pub fn csr_spmv_advanced<T: Value>(alpha: T, a: &Csr<T>, beta: T, b: &Dense<T>, x: &mut Dense<T>) {
+    let nrhs = b.shape().cols;
+    let row_ptrs = a.row_ptrs();
+    let col_idxs = a.col_idxs();
+    let values = a.values();
+    for i in 0..a.shape().rows {
+        for c in 0..nrhs {
+            let mut acc = T::zero();
+            for k in row_ptrs[i] as usize..row_ptrs[i + 1] as usize {
+                acc += values[k] * b.at(col_idxs[k] as usize, c);
+            }
+            let xv = x.at_mut(i, c);
+            *xv = if beta.is_zero() {
+                alpha * acc
+            } else {
+                alpha * acc + beta * *xv
+            };
+        }
+    }
+}
+
+/// COO SpMV: x = A b. Requires row-sorted entries.
+pub fn coo_spmv<T: Value>(a: &Coo<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    x.fill(T::zero());
+    coo_spmv_accumulate(T::one(), a, b, x);
+}
+
+/// COO SpMV: x = alpha A b + beta x.
+pub fn coo_spmv_advanced<T: Value>(alpha: T, a: &Coo<T>, beta: T, b: &Dense<T>, x: &mut Dense<T>) {
+    scal(beta, x.as_mut_slice());
+    coo_spmv_accumulate(alpha, a, b, x);
+}
+
+/// x += alpha A b — the COO accumulation core.
+pub fn coo_spmv_accumulate<T: Value>(alpha: T, a: &Coo<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let nrhs = b.shape().cols;
+    for idx in 0..a.nnz() {
+        let r = a.row_idxs()[idx] as usize;
+        let c = a.col_idxs()[idx] as usize;
+        let v = alpha * a.values()[idx];
+        for j in 0..nrhs {
+            *x.at_mut(r, j) += v * b.at(c, j);
+        }
+    }
+}
+
+/// ELL SpMV: x = A b. Column-major storage, zero-padded (col 0 / val 0).
+pub fn ell_spmv<T: Value>(a: &Ell<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let k = a.stored_per_row();
+    let cols = a.col_idxs();
+    let vals = a.values();
+    for i in 0..n {
+        for c in 0..nrhs {
+            let mut acc = T::zero();
+            for j in 0..k {
+                let pos = j * n + i;
+                // padding has val == 0, so no branch needed
+                acc += vals[pos] * b.at(cols[pos] as usize, c);
+            }
+            *x.at_mut(i, c) = acc;
+        }
+    }
+}
+
+/// SELL-P SpMV: x = A b.
+pub fn sellp_spmv<T: Value>(a: &SellP<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let ss = a.slice_size();
+    for s in 0..a.num_slices() {
+        let width = a.slice_lengths[s];
+        let base = a.slice_sets[s];
+        for r in 0..ss {
+            let i = s * ss + r;
+            if i >= n {
+                break;
+            }
+            for c in 0..nrhs {
+                let mut acc = T::zero();
+                for j in 0..width {
+                    let pos = base + j * ss + r;
+                    acc += a.values[pos] * b.at(a.col_idxs[pos] as usize, c);
+                }
+                *x.at_mut(i, c) = acc;
+            }
+        }
+    }
+}
+
+/// Convert CSR row pointers to explicit row indices (COO expansion).
+pub fn row_ptrs_to_idxs(row_ptrs: &[IndexType], nnz: usize) -> Vec<IndexType> {
+    let mut rows = vec![0 as IndexType; nnz];
+    for i in 0..row_ptrs.len() - 1 {
+        for k in row_ptrs[i] as usize..row_ptrs[i + 1] as usize {
+            rows[k] = i as IndexType;
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+    use crate::core::executor::Executor;
+    use crate::core::matrix_data::MatrixData;
+
+    #[test]
+    fn blas1_basics() {
+        let x = [1.0f64, 2.0, 3.0];
+        let mut y = [1.0f64, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        axpby(1.0, &x, 0.5, &mut y);
+        assert_eq!(y, [2.5, 4.5, 6.5]);
+        scal(0.0, &mut y);
+        assert_eq!(y, [0.0, 0.0, 0.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm2(&x) - 14.0f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpby_beta_zero_kills_nan() {
+        let x = [1.0f64];
+        let mut y = [f64::NAN];
+        axpby(3.0, &x, 0.0, &mut y);
+        assert_eq!(y, [3.0]);
+        let mut y = [f64::NAN];
+        scal(0.0, &mut y);
+        assert_eq!(y, [0.0]);
+    }
+
+    #[test]
+    fn ew_mul_basics() {
+        let mut z = [0.0f32; 3];
+        ew_mul(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &mut z);
+        assert_eq!(z, [4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn row_ptr_expansion() {
+        assert_eq!(row_ptrs_to_idxs(&[0, 2, 3, 5], 5), vec![0, 0, 1, 2, 2]);
+        assert_eq!(row_ptrs_to_idxs(&[0, 0, 0, 2], 2), vec![2, 2]);
+    }
+
+    #[test]
+    fn csr_advanced_beta_zero_kills_nan() {
+        let d = MatrixData::from_triplets(Dim2::square(2), &[0, 1], &[0, 1], &[1.0, 1.0])
+            .unwrap();
+        let a = Csr::from_data(Executor::reference(), &d).unwrap();
+        let b = Dense::vector(Executor::reference(), &[2.0, 3.0]);
+        let mut x = Dense::vector(Executor::reference(), &[f64::NAN, f64::NAN]);
+        csr_spmv_advanced(1.0, &a, 0.0, &b, &mut x);
+        assert_eq!(x.as_slice(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn multi_rhs_spmv() {
+        // A = [[1, 2], [0, 3]], B = [[1, 10], [2, 20]]
+        let d = MatrixData::from_triplets(
+            Dim2::square(2),
+            &[0, 0, 1],
+            &[0, 1, 1],
+            &[1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        let a = Csr::from_data(Executor::reference(), &d).unwrap();
+        let b = Dense::from_vec(
+            Executor::reference(),
+            Dim2::new(2, 2),
+            vec![1.0, 10.0, 2.0, 20.0],
+        )
+        .unwrap();
+        let mut x = Dense::zeros(Executor::reference(), Dim2::new(2, 2));
+        csr_spmv(&a, &b, &mut x);
+        assert_eq!(x.as_slice(), &[5.0, 50.0, 6.0, 60.0]);
+    }
+}

@@ -1,0 +1,269 @@
+//! BabelStream kernels (Fig. 6 of the paper).
+//!
+//! The five kernels of the BabelStream benchmark [Deakin et al. 2017]
+//! reimplemented on every executor: `copy c=a`, `mul b=s*c`, `add c=a+b`,
+//! `triad a=b+s*c`, `dot sum(a*b)`. The bench harness sweeps array sizes
+//! and reports achieved bandwidth; the roofline model projects the same
+//! kernels onto the paper's GPUs.
+
+use std::sync::Arc;
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::{par_for, Executor, ParConfig};
+use crate::core::types::Value;
+use crate::runtime::bucket::pad_to;
+use crate::runtime::{Arg, XlaRuntime};
+
+/// Which BabelStream kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamKernel {
+    Copy,
+    Mul,
+    Add,
+    Triad,
+    Dot,
+}
+
+impl StreamKernel {
+    /// All kernels in BabelStream order.
+    pub const ALL: [StreamKernel; 5] = [
+        StreamKernel::Copy,
+        StreamKernel::Mul,
+        StreamKernel::Add,
+        StreamKernel::Triad,
+        StreamKernel::Dot,
+    ];
+
+    /// Display name matching the BabelStream output.
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamKernel::Copy => "Copy",
+            StreamKernel::Mul => "Mul",
+            StreamKernel::Add => "Add",
+            StreamKernel::Triad => "Triad",
+            StreamKernel::Dot => "Dot",
+        }
+    }
+
+    /// Artifact family name.
+    pub fn artifact(self) -> &'static str {
+        match self {
+            StreamKernel::Copy => "stream_copy",
+            StreamKernel::Mul => "stream_mul",
+            StreamKernel::Add => "stream_add",
+            StreamKernel::Triad => "stream_triad",
+            StreamKernel::Dot => "stream_dot",
+        }
+    }
+
+    /// Bytes moved per element at scalar size `elem` (BabelStream
+    /// accounting: reads + writes, no write-allocate).
+    pub fn bytes_per_element(self, elem: usize) -> usize {
+        match self {
+            StreamKernel::Copy => 2 * elem,  // read a, write c
+            StreamKernel::Mul => 2 * elem,   // read c, write b
+            StreamKernel::Add => 3 * elem,   // read a+b, write c
+            StreamKernel::Triad => 3 * elem, // read b+c, write a
+            StreamKernel::Dot => 2 * elem,   // read a+b
+        }
+    }
+
+    /// FLOPs per element.
+    pub fn flops_per_element(self) -> usize {
+        match self {
+            StreamKernel::Copy => 0,
+            StreamKernel::Mul => 1,
+            StreamKernel::Add => 1,
+            StreamKernel::Triad => 2,
+            StreamKernel::Dot => 2,
+        }
+    }
+}
+
+/// Working arrays of one BabelStream run.
+pub struct StreamArrays<T> {
+    pub a: Vec<T>,
+    pub b: Vec<T>,
+    pub c: Vec<T>,
+}
+
+impl<T: Value> StreamArrays<T> {
+    /// BabelStream initial values: a=0.1, b=0.2, c=0.0.
+    pub fn new(n: usize) -> Self {
+        Self {
+            a: vec![T::from_f64(0.1); n],
+            b: vec![T::from_f64(0.2); n],
+            c: vec![T::zero(); n],
+        }
+    }
+}
+
+/// The scalar used by mul/triad, as in BabelStream.
+pub const STREAM_SCALAR: f64 = 0.4;
+
+/// Run one kernel once. Returns the dot value for `Dot`, 0 otherwise.
+pub fn run<T: Value>(
+    exec: &Arc<Executor>,
+    kernel: StreamKernel,
+    arrays: &mut StreamArrays<T>,
+) -> Result<T> {
+    match &**exec {
+        Executor::Reference => Ok(run_host(&ParConfig { threads: 1, seq_threshold: usize::MAX }, kernel, arrays)),
+        Executor::Par(cfg) => Ok(run_host(cfg, kernel, arrays)),
+        Executor::Xla(e) => run_xla(&e.runtime, kernel, arrays),
+    }
+}
+
+fn run_host<T: Value>(cfg: &ParConfig, kernel: StreamKernel, ar: &mut StreamArrays<T>) -> T {
+    use crate::kernels::ptr::SlicePtr;
+    let s = T::from_f64(STREAM_SCALAR);
+    let n = ar.a.len();
+    match kernel {
+        StreamKernel::Copy => {
+            let (a, c) = (&ar.a, SlicePtr(ar.c.as_mut_ptr()));
+            par_for(cfg, n, |_, lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: [lo, hi) disjoint across threads.
+                    unsafe { *c.at(i) = a[i] };
+                }
+            });
+            T::zero()
+        }
+        StreamKernel::Mul => {
+            let (c, b) = (&ar.c, SlicePtr(ar.b.as_mut_ptr()));
+            par_for(cfg, n, |_, lo, hi| {
+                for i in lo..hi {
+                    unsafe { *b.at(i) = s * c[i] };
+                }
+            });
+            T::zero()
+        }
+        StreamKernel::Add => {
+            let (a, b, c) = (&ar.a, &ar.b, SlicePtr(ar.c.as_mut_ptr()));
+            par_for(cfg, n, |_, lo, hi| {
+                for i in lo..hi {
+                    unsafe { *c.at(i) = a[i] + b[i] };
+                }
+            });
+            T::zero()
+        }
+        StreamKernel::Triad => {
+            let (b, c, a) = (&ar.b, &ar.c, SlicePtr(ar.a.as_mut_ptr()));
+            par_for(cfg, n, |_, lo, hi| {
+                for i in lo..hi {
+                    unsafe { *a.at(i) = b[i] + s * c[i] };
+                }
+            });
+            T::zero()
+        }
+        StreamKernel::Dot => crate::kernels::par::dot(cfg, &ar.a, &ar.b),
+    }
+}
+
+fn run_xla<T: Value>(
+    rt: &XlaRuntime,
+    kernel: StreamKernel,
+    ar: &mut StreamArrays<T>,
+) -> Result<T> {
+    let n = ar.a.len();
+    let meta = rt.select(kernel.artifact(), T::PRECISION, n, 0, 0).map_err(|_| {
+        SparkleError::Runtime(format!(
+            "no `{}` artifact at {} for n={n}",
+            kernel.artifact(),
+            T::PRECISION
+        ))
+    })?;
+    let s = T::from_f64(STREAM_SCALAR);
+    match kernel {
+        StreamKernel::Copy => {
+            let ap = pad_to(&ar.a, meta.n, T::zero());
+            let out = rt.run::<T>(&meta.name, &[Arg::vec(&ap)])?;
+            ar.c.copy_from_slice(&out[0][..n]);
+            Ok(T::zero())
+        }
+        StreamKernel::Mul => {
+            let cp = pad_to(&ar.c, meta.n, T::zero());
+            let out = rt.run::<T>(&meta.name, &[Arg::Scalar(s), Arg::vec(&cp)])?;
+            ar.b.copy_from_slice(&out[0][..n]);
+            Ok(T::zero())
+        }
+        StreamKernel::Add => {
+            let ap = pad_to(&ar.a, meta.n, T::zero());
+            let bp = pad_to(&ar.b, meta.n, T::zero());
+            let out = rt.run::<T>(&meta.name, &[Arg::vec(&ap), Arg::vec(&bp)])?;
+            ar.c.copy_from_slice(&out[0][..n]);
+            Ok(T::zero())
+        }
+        StreamKernel::Triad => {
+            let bp = pad_to(&ar.b, meta.n, T::zero());
+            let cp = pad_to(&ar.c, meta.n, T::zero());
+            let out = rt.run::<T>(&meta.name, &[Arg::Scalar(s), Arg::vec(&bp), Arg::vec(&cp)])?;
+            ar.a.copy_from_slice(&out[0][..n]);
+            Ok(T::zero())
+        }
+        StreamKernel::Dot => {
+            let ap = pad_to(&ar.a, meta.n, T::zero());
+            let bp = pad_to(&ar.b, meta.n, T::zero());
+            let out = rt.run::<T>(&meta.name, &[Arg::vec(&ap), Arg::vec(&bp)])?;
+            Ok(out[0][0])
+        }
+    }
+}
+
+/// Verify array contents after `iters` full Copy→Mul→Add→Triad cycles
+/// (BabelStream's self-check). Returns the max relative error.
+pub fn verify<T: Value>(arrays: &StreamArrays<T>, iters: usize) -> f64 {
+    let (mut ga, mut gb, mut gc) = (0.1f64, 0.2f64, 0.0f64);
+    for _ in 0..iters {
+        gc = ga;
+        gb = STREAM_SCALAR * gc;
+        gc = ga + gb;
+        ga = gb + STREAM_SCALAR * gc;
+    }
+    let err = |v: &[T], gold: f64| -> f64 {
+        v.iter()
+            .map(|x| ((Value::as_f64(*x) - gold) / gold).abs())
+            .fold(0.0, f64::max)
+    };
+    err(&arrays.a, ga).max(err(&arrays.b, gb)).max(err(&arrays.c, gc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_and_flops_accounting() {
+        assert_eq!(StreamKernel::Copy.bytes_per_element(8), 16);
+        assert_eq!(StreamKernel::Add.bytes_per_element(4), 12);
+        assert_eq!(StreamKernel::Triad.flops_per_element(), 2);
+        assert_eq!(StreamKernel::Copy.flops_per_element(), 0);
+    }
+
+    #[test]
+    fn host_cycle_verifies() {
+        for exec in [Executor::reference(), Executor::par_with_threads(2)] {
+            let mut ar = StreamArrays::<f64>::new(1000);
+            let iters = 3;
+            for _ in 0..iters {
+                for k in [
+                    StreamKernel::Copy,
+                    StreamKernel::Mul,
+                    StreamKernel::Add,
+                    StreamKernel::Triad,
+                ] {
+                    run(&exec, k, &mut ar).unwrap();
+                }
+            }
+            assert!(verify(&ar, iters) < 1e-12, "exec {}", exec.name());
+        }
+    }
+
+    #[test]
+    fn dot_matches_expected() {
+        let exec = Executor::par_with_threads(2);
+        let mut ar = StreamArrays::<f64>::new(500);
+        let d = run(&exec, StreamKernel::Dot, &mut ar).unwrap();
+        assert!((d - 500.0 * 0.1 * 0.2).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,424 @@
+//! XLA backend kernels — the "ported backend" of the reproduction.
+//!
+//! Where the paper ports Ginkgo's CUDA kernels to DPC++, this backend
+//! re-expresses them as AOT-compiled JAX/Pallas artifacts executed through
+//! PJRT. Shapes are static, so every call pads its operands to the next
+//! artifact bucket (see `runtime::bucket`); padding is arithmetic-neutral
+//! (zero values, index-0 columns/rows pointing at padded zero data).
+//!
+//! Oversized operands are *chunked*: COO nonzeros are split across
+//! repeated accumulating launches, ELL widths across width-chunks. Vector
+//! length is bounded by the largest lowered bucket — matrices larger than
+//! that run on the `par` executor (the benches obey this; the perf model
+//! covers full-size projections).
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::dense::Dense;
+use crate::matrix::ell::Ell;
+use crate::runtime::bucket::pad_to;
+use crate::runtime::{Arg, XlaRuntime};
+
+// ---------------------------------------------------------------- BLAS-1
+
+/// y += alpha * x.
+pub fn axpy<T: Value>(rt: &XlaRuntime, alpha: T, x: &[T], y: &mut [T]) -> Result<()> {
+    run_ew(rt, "axpy", &[Arg::Scalar(alpha)], x, y)
+}
+
+/// y = alpha * x + beta * y.
+pub fn axpby<T: Value>(rt: &XlaRuntime, alpha: T, x: &[T], beta: T, y: &mut [T]) -> Result<()> {
+    run_ew(rt, "axpby", &[Arg::Scalar(alpha), Arg::Scalar(beta)], x, y)
+}
+
+/// Shared launcher for element-wise artifacts `f(scalars..., x, y) -> y'`.
+/// Chunks inputs longer than the largest bucket.
+fn run_ew<T: Value>(
+    rt: &XlaRuntime,
+    kernel: &str,
+    scalars: &[Arg<'_, T>],
+    x: &[T],
+    y: &mut [T],
+) -> Result<()> {
+    debug_assert_eq!(x.len(), y.len());
+    let family = rt.manifest().family(kernel, T::PRECISION);
+    let max_n = family.last().map(|a| a.n).unwrap_or(0);
+    if max_n == 0 {
+        return Err(SparkleError::Runtime(format!(
+            "no `{kernel}` artifacts at {} — run `make artifacts`",
+            T::PRECISION
+        )));
+    }
+    let mut off = 0;
+    while off < x.len() {
+        let len = (x.len() - off).min(max_n);
+        let meta = rt.select(kernel, T::PRECISION, len, 0, 0)?;
+        let xp = pad_to(&x[off..off + len], meta.n, T::zero());
+        let yp = pad_to(&y[off..off + len], meta.n, T::zero());
+        let mut args: Vec<Arg<'_, T>> = Vec::with_capacity(scalars.len() + 2);
+        for s in scalars {
+            args.push(match s {
+                Arg::Scalar(v) => Arg::Scalar(*v),
+                _ => unreachable!("run_ew scalars must be Arg::Scalar"),
+            });
+        }
+        args.push(Arg::vec(&xp));
+        args.push(Arg::vec(&yp));
+        let out = rt.run::<T>(&meta.name, &args)?;
+        y[off..off + len].copy_from_slice(&out[0][..len]);
+        off += len;
+    }
+    Ok(())
+}
+
+/// x *= beta.
+pub fn scal<T: Value>(rt: &XlaRuntime, beta: T, x: &mut [T]) -> Result<()> {
+    let family = rt.manifest().family("scal", T::PRECISION);
+    let max_n = family.last().map(|a| a.n).unwrap_or(0);
+    if max_n == 0 {
+        return Err(SparkleError::Runtime(
+            "no `scal` artifacts — run `make artifacts`".into(),
+        ));
+    }
+    let mut off = 0;
+    while off < x.len() {
+        let len = (x.len() - off).min(max_n);
+        let meta = rt.select("scal", T::PRECISION, len, 0, 0)?;
+        let xp = pad_to(&x[off..off + len], meta.n, T::zero());
+        let out = rt.run::<T>(&meta.name, &[Arg::Scalar(beta), Arg::vec(&xp)])?;
+        x[off..off + len].copy_from_slice(&out[0][..len]);
+        off += len;
+    }
+    Ok(())
+}
+
+/// Dot product (chunked accumulation on host across buckets).
+pub fn dot<T: Value>(rt: &XlaRuntime, x: &[T], y: &[T]) -> Result<T> {
+    debug_assert_eq!(x.len(), y.len());
+    let family = rt.manifest().family("dot", T::PRECISION);
+    let max_n = family.last().map(|a| a.n).unwrap_or(0);
+    if max_n == 0 {
+        return Err(SparkleError::Runtime(
+            "no `dot` artifacts — run `make artifacts`".into(),
+        ));
+    }
+    let mut acc = T::zero();
+    let mut off = 0;
+    while off < x.len() {
+        let len = (x.len() - off).min(max_n);
+        let meta = rt.select("dot", T::PRECISION, len, 0, 0)?;
+        let xp = pad_to(&x[off..off + len], meta.n, T::zero());
+        let yp = pad_to(&y[off..off + len], meta.n, T::zero());
+        let out = rt.run::<T>(&meta.name, &[Arg::vec(&xp), Arg::vec(&yp)])?;
+        acc += out[0][0];
+        off += len;
+    }
+    Ok(acc)
+}
+
+/// Euclidean norm (dot + host sqrt; zero padding is norm-neutral).
+pub fn norm2<T: Value>(rt: &XlaRuntime, x: &[T]) -> Result<T> {
+    Ok(dot(rt, x, x)?.sqrt())
+}
+
+/// z = x ⊙ y.
+pub fn ew_mul<T: Value>(rt: &XlaRuntime, x: &[T], y: &[T], z: &mut [T]) -> Result<()> {
+    // reuse axpby-shaped launcher: mul artifact is f(x, y) -> x*y
+    debug_assert_eq!(x.len(), z.len());
+    let family = rt.manifest().family("ew_mul", T::PRECISION);
+    let max_n = family.last().map(|a| a.n).unwrap_or(0);
+    if max_n == 0 {
+        return Err(SparkleError::Runtime(
+            "no `ew_mul` artifacts — run `make artifacts`".into(),
+        ));
+    }
+    let mut off = 0;
+    while off < x.len() {
+        let len = (x.len() - off).min(max_n);
+        let meta = rt.select("ew_mul", T::PRECISION, len, 0, 0)?;
+        let xp = pad_to(&x[off..off + len], meta.n, T::zero());
+        let yp = pad_to(&y[off..off + len], meta.n, T::zero());
+        let out = rt.run::<T>(&meta.name, &[Arg::vec(&xp), Arg::vec(&yp)])?;
+        z[off..off + len].copy_from_slice(&out[0][..len]);
+        off += len;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ SpMV
+
+/// ELL SpMV: x = alpha A b + beta x (single rhs).
+///
+/// The artifact (`ell_adv`) is the Pallas row-slice kernel; storage is
+/// column-major `(k, n)` which maps 1:1 onto the kernel's `(k, n)` blocks.
+/// Width chunks accumulate via repeated launches when `k` exceeds the
+/// largest lowered width bucket.
+pub fn ell_spmv_advanced<T: Value>(
+    rt: &XlaRuntime,
+    alpha: T,
+    a: &Ell<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    if b.shape().cols != 1 {
+        return Err(SparkleError::NotSupported {
+            op: "xla ell multi-rhs",
+            exec: "xla",
+        });
+    }
+    let n = a.shape().rows;
+    let ncols = a.shape().cols;
+    let k = a.stored_per_row();
+    let family = rt.manifest().family("ell_adv", T::PRECISION);
+    let max_k = family.iter().map(|m| m.k).max().unwrap_or(0);
+    if max_k == 0 {
+        return Err(SparkleError::Runtime(
+            "no `ell_adv` artifacts — run `make artifacts`".into(),
+        ));
+    }
+    // b is gathered by column index, so the padded b must cover ncols.
+    let need_n = n.max(ncols);
+
+    // single-bucket fast path: the padded (k_b, n_b) matrix arrays are
+    // built once and cached on the matrix (L3 perf iteration 3 —
+    // re-padding ~2 k·n values per apply dominated solver loops)
+    if k <= max_k {
+        let meta = rt.select("ell_adv", T::PRECISION, need_n, k.max(1), 0)?;
+        let (mk, mn) = (meta.k, meta.n);
+        let name = meta.name.clone();
+        // build the padded matrix operands ON DEVICE, once
+        let cache = {
+            let cached = a.padded_cache.get();
+            match cached {
+                Some(c) => c.clone(),
+                None => {
+                    let mut vals = vec![T::zero(); mk * mn];
+                    let mut cols = vec![0i32; mk * mn];
+                    for j in 0..k {
+                        let src = j * n;
+                        vals[j * mn..j * mn + n]
+                            .copy_from_slice(&a.values()[src..src + n]);
+                        cols[j * mn..j * mn + n]
+                            .copy_from_slice(&a.col_idxs()[src..src + n]);
+                    }
+                    let vbuf = rt.to_device(&vals, &[mk, mn])?;
+                    let cbuf = rt.to_device(&cols, &[mk, mn])?;
+                    let arc = std::sync::Arc::new((mk, mn, vbuf, cbuf));
+                    let _ = a.padded_cache.set(arc.clone());
+                    arc
+                }
+            }
+        };
+        debug_assert_eq!((cache.0, cache.1), (mk, mn), "bucket selection must be stable");
+        let bp = pad_to(&b.as_slice()[..ncols], mn, T::zero());
+        let xp = pad_to(&x.as_slice()[..n], mn, T::zero());
+        let alpha_b = rt.to_device(&[alpha], &[])?;
+        let beta_b = rt.to_device(&[beta], &[])?;
+        let b_b = rt.to_device(&bp, &[mn])?;
+        let x_b = rt.to_device(&xp, &[mn])?;
+        let out = rt.run_buffers::<T>(
+            &name,
+            &[&alpha_b, &cache.2, &cache.3, &b_b, &beta_b, &x_b],
+        )?;
+        x.as_mut_slice()[..n].copy_from_slice(&out[0][..n]);
+        return Ok(());
+    }
+
+    // width-chunked slow path (k exceeds every lowered width bucket)
+    let mut j0 = 0;
+    let mut beta_eff = beta;
+    loop {
+        let kchunk = (k - j0).min(max_k).max(1);
+        let meta = rt.select("ell_adv", T::PRECISION, need_n, kchunk, 0)?;
+        // pad the (kchunk, n) column-major block to (meta.k, meta.n)
+        let mut vals = vec![T::zero(); meta.k * meta.n];
+        let mut cols = vec![0i32; meta.k * meta.n];
+        for j in 0..kchunk {
+            let src = (j0 + j) * n;
+            vals[j * meta.n..j * meta.n + n].copy_from_slice(&a.values()[src..src + n]);
+            cols[j * meta.n..j * meta.n + n].copy_from_slice(&a.col_idxs()[src..src + n]);
+        }
+        let bp = pad_to(&b.as_slice()[..ncols], meta.n, T::zero());
+        let xp = pad_to(&x.as_slice()[..n], meta.n, T::zero());
+        let out = rt.run::<T>(
+            &meta.name,
+            &[
+                Arg::Scalar(alpha),
+                Arg::mat(&vals, meta.k, meta.n),
+                Arg::idx_mat(&cols, meta.k, meta.n),
+                Arg::vec(&bp),
+                Arg::Scalar(beta_eff),
+                Arg::vec(&xp),
+            ],
+        )?;
+        x.as_mut_slice()[..n].copy_from_slice(&out[0][..n]);
+        j0 += kchunk;
+        if j0 >= k {
+            break;
+        }
+        beta_eff = T::one(); // subsequent width-chunks accumulate
+    }
+    Ok(())
+}
+
+/// COO SpMV: x = alpha A b + beta x (single rhs). Oversized nnz is
+/// chunked across accumulating launches (`beta = 1` after the first).
+pub fn coo_spmv_advanced<T: Value>(
+    rt: &XlaRuntime,
+    alpha: T,
+    a: &Coo<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    if b.shape().cols != 1 {
+        return Err(SparkleError::NotSupported {
+            op: "xla coo multi-rhs",
+            exec: "xla",
+        });
+    }
+    // single-bucket fast path with cached padded triplet arrays
+    // (L3 perf iteration 3)
+    let nrows = a.shape().rows;
+    let ncols = a.shape().cols;
+    let need_n = nrows.max(ncols);
+    if let Ok(meta) = rt.select("coo_adv", T::PRECISION, need_n, 0, a.nnz().max(1)) {
+        let (mnnz, mn) = (meta.nnz, meta.n);
+        let name = meta.name.clone();
+        let cache = match a.padded_cache.get() {
+            Some(c) => c.clone(),
+            None => {
+                let rows_p = pad_to(a.row_idxs(), mnnz, 0i32);
+                let cols_p = pad_to(a.col_idxs(), mnnz, 0i32);
+                let vals_p = pad_to(a.values(), mnnz, T::zero());
+                let arc = std::sync::Arc::new((
+                    mnnz,
+                    rt.to_device(&rows_p, &[mnnz])?,
+                    rt.to_device(&cols_p, &[mnnz])?,
+                    rt.to_device(&vals_p, &[mnnz])?,
+                ));
+                let _ = a.padded_cache.set(arc.clone());
+                arc
+            }
+        };
+        debug_assert_eq!(cache.0, mnnz, "bucket selection must be stable");
+        let bp = pad_to(&b.as_slice()[..ncols], mn, T::zero());
+        let xp = pad_to(&x.as_slice()[..nrows], mn, T::zero());
+        let alpha_b = rt.to_device(&[alpha], &[])?;
+        let beta_b = rt.to_device(&[beta], &[])?;
+        let b_b = rt.to_device(&bp, &[mn])?;
+        let x_b = rt.to_device(&xp, &[mn])?;
+        let out = rt.run_buffers::<T>(
+            &name,
+            &[&alpha_b, &cache.3, &cache.1, &cache.2, &b_b, &beta_b, &x_b],
+        )?;
+        x.as_mut_slice()[..nrows].copy_from_slice(&out[0][..nrows]);
+        return Ok(());
+    }
+    coo_arrays_spmv_advanced(
+        rt,
+        alpha,
+        a.row_idxs(),
+        a.col_idxs(),
+        a.values(),
+        a.shape().rows,
+        a.shape().cols,
+        beta,
+        b,
+        x,
+    )
+}
+
+/// CSR SpMV on the XLA executor: the row pointers are expanded to
+/// explicit row indices and dispatched to the COO segment-sum artifact.
+/// Numerically identical to row-wise CSR; the perf model accounts true
+/// CSR traffic separately (see `perfmodel::traffic`).
+pub fn csr_spmv_advanced<T: Value>(
+    rt: &XlaRuntime,
+    alpha: T,
+    a: &Csr<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    if b.shape().cols != 1 {
+        return Err(SparkleError::NotSupported {
+            op: "xla csr multi-rhs",
+            exec: "xla",
+        });
+    }
+    coo_arrays_spmv_advanced(
+        rt,
+        alpha,
+        a.expanded_rows(),
+        a.col_idxs(),
+        a.values(),
+        a.shape().rows,
+        a.shape().cols,
+        beta,
+        b,
+        x,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn coo_arrays_spmv_advanced<T: Value>(
+    rt: &XlaRuntime,
+    alpha: T,
+    rows: &[i32],
+    cols: &[i32],
+    vals: &[T],
+    nrows: usize,
+    ncols: usize,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    let nnz = vals.len();
+    let need_n = nrows.max(ncols);
+    let max_meta = rt
+        .manifest()
+        .max_nnz_at("coo_adv", T::PRECISION, need_n)
+        .ok_or_else(|| {
+            SparkleError::Runtime(format!(
+                "no `coo_adv` artifact covers n={need_n} at {} — run `make artifacts` \
+                 or use the par executor for matrices this large",
+                T::PRECISION
+            ))
+        })?;
+    let max_nnz = max_meta.nnz;
+    let mut off = 0;
+    let mut beta_eff = beta;
+    loop {
+        let chunk = (nnz - off).min(max_nnz);
+        let meta = rt.select("coo_adv", T::PRECISION, need_n, 0, chunk.max(1))?;
+        let rp = pad_to(&rows[off..off + chunk], meta.nnz, 0i32);
+        let cp = pad_to(&cols[off..off + chunk], meta.nnz, 0i32);
+        let vp = pad_to(&vals[off..off + chunk], meta.nnz, T::zero());
+        let bp = pad_to(&b.as_slice()[..ncols], meta.n, T::zero());
+        let xp = pad_to(&x.as_slice()[..nrows], meta.n, T::zero());
+        let out = rt.run::<T>(
+            &meta.name,
+            &[
+                Arg::Scalar(alpha),
+                Arg::vec(&vp),
+                Arg::idx(&rp),
+                Arg::idx(&cp),
+                Arg::vec(&bp),
+                Arg::Scalar(beta_eff),
+                Arg::vec(&xp),
+            ],
+        )?;
+        x.as_mut_slice()[..nrows].copy_from_slice(&out[0][..nrows]);
+        off += chunk;
+        if off >= nnz {
+            break;
+        }
+        beta_eff = T::one();
+    }
+    Ok(())
+}

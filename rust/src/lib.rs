@@ -1,0 +1,42 @@
+//! `sparkle` — a platform-portable sparse linear algebra library.
+//!
+//! Reproduction of *"Porting a sparse linear algebra math library to
+//! Intel GPUs"* (Tsai, Cojean, Anzt, 2021) in the three-layer
+//! Rust + JAX + Pallas architecture:
+//!
+//! * **core / matrix / solver** — the Ginkgo-shaped library: executors,
+//!   `LinOp`, sparse formats, Krylov solvers, preconditioners.
+//! * **kernels** — per-executor backends: `reference` (sequential
+//!   oracle), `par` (multithreaded host), `xla` (AOT JAX/Pallas HLO via
+//!   PJRT — the analog of the paper's new DPC++ backend).
+//! * **runtime** — PJRT artifact loading, shape buckets, manifest.
+//! * **perfmodel** — calibrated roofline models of the paper's GPUs
+//!   (GEN9, GEN12, V100, RadeonVII): the testbed substitute.
+//! * **matgen / io** — SuiteSparse-like synthetic matrices + MatrixMarket.
+//! * **bench_util / testing** — hand-rolled bench harness and property
+//!   testing (the offline vendor set has no criterion/proptest).
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench_util;
+pub mod core;
+pub mod io;
+pub mod kernels;
+pub mod matgen;
+pub mod matrix;
+pub mod perfmodel;
+pub mod precond;
+pub mod runtime;
+pub mod solver;
+pub mod stop;
+pub mod testing;
+pub mod vendor_mkl;
+
+pub use crate::core::dim::Dim2;
+pub use crate::core::error::{Result, SparkleError};
+pub use crate::core::executor::Executor;
+pub use crate::core::linop::LinOp;
+pub use crate::core::matrix_data::MatrixData;
+pub use crate::core::types::{IndexType, Precision, Value};
+pub use crate::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};

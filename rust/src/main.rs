@@ -1,0 +1,351 @@
+//! `sparkle` CLI launcher.
+//!
+//! Hand-rolled argument parsing (the offline vendor set has no clap).
+//!
+//! Commands:
+//!   info                          runtime + artifact status
+//!   gen <name> [--scale N] [--out FILE.mtx]
+//!                                 generate a Table-1 analog matrix
+//!   spmv <file.mtx|name> [--exec E] [--format F] [--reps N]
+//!                                 time one SpMV
+//!   solve <file.mtx|name> [--solver S] [--exec E] [--tol T] [--iters N]
+//!                                 run a Krylov solver
+//!   project <name> [--device D]   device-model projection for a matrix
+//!   devices                       print the modeled GPU table
+
+use std::collections::HashMap;
+
+use sparkle::bench_util::{f2, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::core::matrix_data::MatrixData;
+use sparkle::matgen::{suite, MatrixStats};
+use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::perfmodel::project::Implementation;
+use sparkle::perfmodel::{project_spmv, Device, SpmvKernelKind};
+use sparkle::solver::{BiCgStab, Cg, Cgs, Fcg, Gmres, Richardson, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::vendor_mkl::VendorCsr;
+use sparkle::{Dim2, Result, SparkleError};
+
+/// Parsed `--key value` options + positional arguments.
+struct Opts {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .peek()
+                    .filter(|v| !v.starts_with("--"))
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "true".into());
+                if val != "true" {
+                    it.next();
+                }
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn executor(name: &str) -> Result<std::sync::Arc<Executor>> {
+    match name {
+        "reference" => Ok(Executor::reference()),
+        "par" => Ok(Executor::par()),
+        "xla" => Executor::xla("artifacts"),
+        other => Err(SparkleError::Parse(format!(
+            "unknown executor `{other}` (reference|par|xla)"
+        ))),
+    }
+}
+
+/// Load a matrix: a path ending in .mtx, or a Table-1 name.
+fn load_matrix(spec: &str, scale: usize) -> Result<MatrixData<f64>> {
+    if spec.ends_with(".mtx") {
+        sparkle::io::read_matrix_market(spec)
+    } else {
+        suite::table1_entry(spec)
+            .map(|e| e.generate::<f64>(scale))
+            .ok_or_else(|| {
+                SparkleError::Parse(format!(
+                    "`{spec}` is neither an .mtx path nor a Table-1 name"
+                ))
+            })
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("sparkle {}", env!("CARGO_PKG_VERSION"));
+    println!("executors: reference, par ({} threads), xla",
+             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        let exec = Executor::xla("artifacts")?;
+        let rt = exec.xla_runtime().unwrap();
+        println!(
+            "artifacts: {} registered (platform {})",
+            rt.manifest().len(),
+            rt.platform_name()
+        );
+    } else {
+        println!("artifacts: NOT BUILT — run `make artifacts`");
+    }
+    Ok(())
+}
+
+fn cmd_devices() {
+    let mut t = Table::new(&[
+        "device", "BW theo", "BW meas", "f64 GF/s", "f32 GF/s", "f16 GF/s",
+    ]);
+    for d in Device::ALL {
+        let s = d.spec();
+        t.row(&[
+            s.name.into(),
+            f2(s.bw_theoretical),
+            f2(s.bw_measured),
+            f2(s.peak_gflops[0]),
+            f2(s.peak_gflops[1]),
+            f2(s.peak_gflops[2]),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_gen(o: &Opts) -> Result<()> {
+    let name = o
+        .positional
+        .get(1)
+        .ok_or_else(|| SparkleError::Parse("gen needs a matrix name".into()))?;
+    let scale = o.get_usize("scale", 64);
+    let data = load_matrix(name, scale)?;
+    let stats = MatrixStats::from_data(&data);
+    println!(
+        "{name}: n={} nnz={} avg_row={:.1} max_row={} cv={:.2}",
+        stats.n, stats.nnz, stats.avg_row, stats.max_row, stats.row_cv
+    );
+    let out = o.get("out", "");
+    if !out.is_empty() {
+        sparkle::io::write_matrix_market(&out, &data)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_spmv(o: &Opts) -> Result<()> {
+    let spec = o
+        .positional
+        .get(1)
+        .ok_or_else(|| SparkleError::Parse("spmv needs a matrix".into()))?;
+    let data = load_matrix(spec, o.get_usize("scale", 64))?;
+    let stats = MatrixStats::from_data(&data);
+    let exec = executor(&o.get("exec", "par"))?;
+    let reps = o.get_usize("reps", 10);
+    let format = o.get("format", "csr");
+    let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+    let op: Box<dyn LinOp<f64>> = match format.as_str() {
+        "csr" => Box::new(Csr::from_data(exec.clone(), &data)?),
+        "coo" => Box::new(Coo::from_data(exec.clone(), &data)?),
+        "ell" => Box::new(Ell::from_data(exec.clone(), &data)?),
+        "sellp" => Box::new(SellP::from_data(exec.clone(), &data)?),
+        "hybrid" => Box::new(Hybrid::from_data(exec.clone(), &data)?),
+        "vendor" => Box::new(VendorCsr::new(Csr::from_data(exec.clone(), &data)?)),
+        other => {
+            return Err(SparkleError::Parse(format!(
+                "unknown format `{other}` (csr|coo|ell|sellp|hybrid|vendor)"
+            )))
+        }
+    };
+    let st = Timer::new(2, reps).run(|| op.apply(&b, &mut x).unwrap());
+    let flops = 2.0 * stats.nnz as f64;
+    println!(
+        "{spec} [{format} on {}]: {:.3} ms/apply, {:.2} GFLOP/s (n={}, nnz={})",
+        exec.name(),
+        st.mean * 1e3,
+        st.rate_giga(flops),
+        stats.n,
+        stats.nnz
+    );
+    Ok(())
+}
+
+fn cmd_solve(o: &Opts) -> Result<()> {
+    let spec = o
+        .positional
+        .get(1)
+        .ok_or_else(|| SparkleError::Parse("solve needs a matrix".into()))?;
+    let data = load_matrix(spec, o.get_usize("scale", 64))?;
+    let stats = MatrixStats::from_data(&data);
+    let exec = executor(&o.get("exec", "par"))?;
+    let tol = o.get_f64("tol", 1e-8);
+    let iters = o.get_usize("iters", 1000);
+    let crit = Criterion::residual(tol, iters);
+    let mut cfg = SolverConfig::with_criterion(crit);
+    cfg.record_history = o.get("history", "false") == "true";
+    let solver_name = o.get("solver", "cg");
+    let solver: Box<dyn Solver<f64>> = match solver_name.as_str() {
+        "cg" => Box::new(Cg::new(cfg.clone())),
+        "fcg" => Box::new(Fcg::new(cfg.clone())),
+        "bicgstab" => Box::new(BiCgStab::new(cfg.clone())),
+        "cgs" => Box::new(Cgs::new(cfg.clone())),
+        "gmres" => Box::new(Gmres::new(cfg.clone())),
+        "richardson" => Box::new(Richardson::new(cfg.clone(), 0.9)),
+        other => {
+            return Err(SparkleError::Parse(format!(
+                "unknown solver `{other}` (cg|fcg|bicgstab|cgs|gmres|richardson)"
+            )))
+        }
+    };
+    let a = Csr::from_data(exec.clone(), &data)?;
+    let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+    let t0 = std::time::Instant::now();
+    let result = solver.solve(&a, &b, &mut x)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{solver_name} on {spec} [{}]: converged={} iters={} residual={:.3e} time={:.1} ms",
+        exec.name(),
+        result.converged,
+        result.iterations,
+        result.resnorm,
+        secs * 1e3
+    );
+    if cfg.record_history {
+        for (i, r) in result.history.iter().enumerate() {
+            println!("  iter {i:>4}: {r:.6e}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_project(o: &Opts) -> Result<()> {
+    let name = o
+        .positional
+        .get(1)
+        .ok_or_else(|| SparkleError::Parse("project needs a Table-1 name".into()))?;
+    let entry = suite::table1_entry(name)
+        .ok_or_else(|| SparkleError::Parse(format!("unknown Table-1 matrix `{name}`")))?;
+    let data = entry.generate::<f64>(o.get_usize("scale", 128));
+    let stats = MatrixStats::from_data(&data).scaled_to(entry.n_full, entry.nnz_full);
+    let mut t = Table::new(&["device", "prec", "kernel", "GF/s", "bound", "rel BW"]);
+    for dev in Device::ALL {
+        let p = if dev == Device::Gen12 {
+            sparkle::Precision::Single
+        } else {
+            sparkle::Precision::Double
+        };
+        for (label, imp, kind) in [
+            ("sparkle csr", Implementation::Sparkle, SpmvKernelKind::Csr),
+            ("sparkle coo", Implementation::Sparkle, SpmvKernelKind::Coo),
+            ("vendor csr", Implementation::Vendor, SpmvKernelKind::Csr),
+        ] {
+            let proj = project_spmv(dev, imp, kind, &stats, p);
+            t.row(&[
+                dev.spec().name.into(),
+                p.to_string(),
+                label.into(),
+                f2(proj.gflops),
+                f2(proj.roofline_bound_gflops),
+                f2(proj.relative_bw),
+            ]);
+        }
+    }
+    println!("projection for {name} at published size (n={}, nnz={}):", entry.n_full, entry.nnz_full);
+    t.print();
+    Ok(())
+}
+
+fn cmd_stream(o: &Opts) -> Result<()> {
+    use sparkle::kernels::stream::{self, StreamArrays, StreamKernel};
+    let exec = executor(&o.get("exec", "par"))?;
+    let n = o.get_usize("n", 1 << 22);
+    let reps = o.get_usize("reps", 10);
+    let mut arrays = StreamArrays::<f64>::new(n);
+    let mut t = Table::new(&["kernel", "GB/s (best)", "GB/s (mean)"]);
+    for kernel in StreamKernel::ALL {
+        let bytes = (kernel.bytes_per_element(8) * n) as f64;
+        let st = Timer::new(2, reps).run(|| {
+            stream::run(&exec, kernel, &mut arrays).unwrap();
+        });
+        t.row(&[
+            kernel.name().into(),
+            f2(bytes / st.min / 1e9),
+            f2(st.rate_giga(bytes)),
+        ]);
+    }
+    println!(
+        "BabelStream on {} ({} elements, {} reps after 2 warmups):",
+        exec.name(),
+        n,
+        reps
+    );
+    t.print();
+    Ok(())
+}
+
+fn usage() {
+    eprintln!(
+        "usage: sparkle <command>\n\
+         commands:\n\
+           info                             runtime + artifact status\n\
+           devices                          modeled GPU spec table\n\
+           gen <name> [--scale N] [--out F] generate a Table-1 analog\n\
+           spmv <mtx|name> [--exec E] [--format F] [--reps N] [--scale N]\n\
+           stream [--exec E] [--n N] [--reps N]  BabelStream kernels\n\
+           solve <mtx|name> [--solver S] [--exec E] [--tol T] [--iters N]\n\
+           project <name> [--scale N]       device-model projection"
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = Opts::parse(&args);
+    let cmd = opts.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "info" => cmd_info(),
+        "devices" => {
+            cmd_devices();
+            Ok(())
+        }
+        "gen" => cmd_gen(&opts),
+        "spmv" => cmd_spmv(&opts),
+        "solve" => cmd_solve(&opts),
+        "stream" => cmd_stream(&opts),
+        "project" => cmd_project(&opts),
+        _ => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,162 @@
+//! Circuit-simulation matrices (rajat31, circuit5M, FullChip analogs).
+//!
+//! Circuit matrices have power-law degree distributions: most nets touch
+//! a handful of nodes, while supply rails / clock trees touch thousands —
+//! the "few very dense rows" that break pure-ELL storage and stress
+//! load-balancing in SpMV (the paper's hardest Fig. 8 outliers).
+//!
+//! Generator: every node gets a short local stamp (resistor-like coupling
+//! to nearby indices), a Pareto-distributed subset of nodes becomes hubs
+//! with long random fan-out, and the diagonal is made dominant (circuit
+//! conductance matrices are).
+
+use crate::core::dim::Dim2;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::testing::prng::Prng;
+
+/// Tuning knobs for the circuit generator.
+#[derive(Debug, Clone)]
+pub struct CircuitConfig {
+    /// Average local (non-hub) connections per node.
+    pub local_degree: usize,
+    /// Fraction of nodes that are hubs (power rails, clock nets).
+    pub hub_fraction: f64,
+    /// Pareto shape for hub fan-out (smaller = heavier tail).
+    pub hub_alpha: f64,
+    /// Cap on a single hub's fan-out (keeps generation linear).
+    pub max_hub_degree: usize,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        Self {
+            local_degree: 3,
+            hub_fraction: 0.002,
+            hub_alpha: 1.1,
+            max_hub_degree: 20_000,
+        }
+    }
+}
+
+/// Generate a circuit-like conductance matrix of dimension `n` with
+/// roughly `target_nnz` nonzeros.
+pub fn circuit<T: Value>(n: usize, target_nnz: usize, seed: u64) -> MatrixData<T> {
+    circuit_with_config(n, target_nnz, seed, &CircuitConfig::default())
+}
+
+/// Generator with explicit knobs.
+pub fn circuit_with_config<T: Value>(
+    n: usize,
+    target_nnz: usize,
+    seed: u64,
+    cfg: &CircuitConfig,
+) -> MatrixData<T> {
+    let mut rng = Prng::new(seed);
+    let mut d = MatrixData::new(Dim2::square(n));
+    // local stamps: short-range couplings (structurally symmetric)
+    let local_budget = target_nnz.saturating_sub(n) / 2; // half for sym pair
+    let per_node = (local_budget / n.max(1)).max(1).min(cfg.local_degree.max(1));
+    for i in 0..n {
+        for _ in 0..per_node {
+            // mostly-local neighbor: index within a window, occasionally far
+            let span = if rng.unit() < 0.9 { 64 } else { n };
+            let lo = i.saturating_sub(span / 2);
+            let hi = (i + span / 2).min(n - 1);
+            let j = lo + rng.below(hi - lo + 1);
+            if j != i {
+                let g = T::from_f64(-rng.uniform(0.1, 1.0));
+                d.push(i as i32, j as i32, g);
+                d.push(j as i32, i as i32, g);
+            }
+        }
+    }
+    // hubs: power-law fan-out
+    let hubs = ((n as f64 * cfg.hub_fraction).ceil() as usize).max(1);
+    for _ in 0..hubs {
+        let h = rng.below(n);
+        let deg = (rng.pareto(32.0, cfg.hub_alpha) as usize)
+            .min(cfg.max_hub_degree)
+            .min(n / 2);
+        for _ in 0..deg {
+            let j = rng.below(n);
+            if j != h {
+                let g = T::from_f64(-rng.uniform(0.01, 0.2));
+                d.push(h as i32, j as i32, g);
+                d.push(j as i32, h as i32, g);
+            }
+        }
+    }
+    // conductance diagonal: dominant (sum of |off-diag| + leak)
+    d.normalize();
+    let mut row_abs = vec![0.0f64; n];
+    for e in &d.entries {
+        if e.row != e.col {
+            row_abs[e.row as usize] += e.val.as_f64().abs();
+        }
+    }
+    for i in 0..n {
+        d.push(i as i32, i as i32, T::from_f64(row_abs[i] + 0.1));
+    }
+    d.normalize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::MatrixStats;
+
+    #[test]
+    fn power_law_tail_present() {
+        let d = circuit::<f64>(20_000, 90_000, 42);
+        let stats = MatrixStats::from_data(&d);
+        assert_eq!(stats.n, 20_000);
+        // heavy tail: max row far above average
+        assert!(
+            stats.max_row as f64 > 8.0 * stats.avg_row,
+            "max {} avg {}",
+            stats.max_row,
+            stats.avg_row
+        );
+        // the tail (max_row) is the circuit signature; cv stays moderate
+        // because most rows are short and regular, as in real rajat/chip
+        // matrices
+        assert!(stats.row_cv > 0.3, "cv {}", stats.row_cv);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = circuit::<f64>(1000, 5000, 7);
+        let b = circuit::<f64>(1000, 5000, 7);
+        assert_eq!(a.nnz(), b.nnz());
+        assert_eq!(a.entries[10], b.entries[10]);
+        let c = circuit::<f64>(1000, 5000, 8);
+        assert_ne!(a.nnz(), c.nnz());
+    }
+
+    #[test]
+    fn diagonally_dominant() {
+        let d = circuit::<f64>(500, 2500, 3);
+        let dense = d.to_dense_vec();
+        for i in 0..500 {
+            let diag = dense[i * 500 + i].abs();
+            let off: f64 = (0..500)
+                .filter(|&j| j != i)
+                .map(|j| dense[i * 500 + j].abs())
+                .sum();
+            assert!(diag > off - 1e-9, "row {i}: {diag} vs {off}");
+        }
+    }
+
+    #[test]
+    fn nnz_in_target_ballpark() {
+        let target = 50_000;
+        let d = circuit::<f64>(10_000, target, 11);
+        let nnz = d.nnz();
+        assert!(
+            nnz as f64 > target as f64 * 0.4 && (nnz as f64) < target as f64 * 3.0,
+            "nnz {nnz} vs target {target}"
+        );
+    }
+}

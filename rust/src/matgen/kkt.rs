@@ -1,0 +1,100 @@
+//! Saddle-point KKT matrices (nlpkkt160 analog).
+//!
+//! Interior-point KKT systems have the 2×2 block form
+//! `[[H, Aᵀ], [A, -δI]]` with H an SPD Hessian (stencil-like) and A a
+//! sparse constraint Jacobian. nlpkkt160 is a 3-D PDE-constrained
+//! optimization problem — H is a 27-point-stencil-like block, which is
+//! why its nnz/row (~27) is the highest of Table 1's non-FEM rows.
+
+use crate::core::dim::Dim2;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::testing::prng::Prng;
+
+/// KKT system with `nh` primal unknowns and `na = nh/2` constraints.
+/// Total dimension `nh + nh/2`; regularization `delta` keeps iterative
+/// solvers stable (the real nlpkkt matrices are similarly regularized).
+pub fn kkt<T: Value>(nh: usize, hess_degree: usize, delta: f64, seed: u64) -> MatrixData<T> {
+    let mut rng = Prng::new(seed);
+    let na = nh / 2;
+    let n = nh + na;
+    let mut d = MatrixData::new(Dim2::square(n));
+    // H block: banded SPD with hess_degree couplings per row
+    for i in 0..nh {
+        for step in 1..=hess_degree / 2 {
+            let j = (i + step) % nh;
+            let v = T::from_f64(-rng.uniform(0.2, 0.8));
+            d.push(i as i32, j as i32, v);
+            d.push(j as i32, i as i32, v);
+        }
+    }
+    // A block (na x nh): each constraint touches ~4 primal variables
+    for c in 0..na {
+        for _ in 0..4 {
+            let j = rng.below(nh);
+            let v = T::from_f64(rng.uniform(-1.0, 1.0));
+            d.push((nh + c) as i32, j as i32, v); // A
+            d.push(j as i32, (nh + c) as i32, v); // A^T
+        }
+    }
+    d.normalize();
+    // diagonal: dominant on H, -delta regularization on the (2,2) block
+    let mut row_abs = vec![0.0f64; n];
+    for e in &d.entries {
+        if e.row != e.col {
+            row_abs[e.row as usize] += e.val.as_f64().abs();
+        }
+    }
+    for i in 0..nh {
+        d.push(i as i32, i as i32, T::from_f64(row_abs[i] + 1.0));
+    }
+    for c in 0..na {
+        let i = nh + c;
+        // dominance keeps the whole system solvable by the paper's
+        // unsymmetric solvers; the sign keeps the saddle-point character
+        d.push(i as i32, i as i32, T::from_f64(row_abs[i] + delta.max(0.1)));
+    }
+    d.normalize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::MatrixStats;
+
+    #[test]
+    fn block_structure_dims() {
+        let d = kkt::<f64>(1000, 26, 0.5, 9);
+        assert_eq!(d.dim.rows, 1500);
+        let s = MatrixStats::from_data(&d);
+        assert!(s.avg_row > 10.0, "{s:?}");
+    }
+
+    #[test]
+    fn constraint_rows_sparser_than_hessian_rows() {
+        let d = kkt::<f64>(2000, 26, 0.5, 10);
+        let lens = d.row_lengths();
+        let h_avg: f64 = lens[..2000].iter().sum::<usize>() as f64 / 2000.0;
+        let a_avg: f64 = lens[2000..].iter().sum::<usize>() as f64 / 1000.0;
+        assert!(h_avg > 2.0 * a_avg, "H {h_avg} vs A {a_avg}");
+    }
+
+    #[test]
+    fn bicgstab_converges_on_kkt() {
+        use crate::core::executor::Executor;
+        use crate::matrix::{Csr, Dense};
+        use crate::solver::{BiCgStab, Solver, SolverConfig};
+        use crate::stop::Criterion;
+        let d = kkt::<f64>(400, 8, 1.0, 12);
+        let n = d.dim.rows;
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &d).unwrap();
+        let b = Dense::filled(exec.clone(), crate::Dim2::new(n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), crate::Dim2::new(n, 1));
+        let r = BiCgStab::new(SolverConfig::with_criterion(Criterion::residual(1e-8, 1000)))
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(r.converged, "{r:?}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Synthetic matrix generators — the SuiteSparse Matrix Collection
+//! substitute (DESIGN.md §Substitutions).
+//!
+//! The paper benchmarks on SuiteSparse matrices (Table 1 + a wide SpMV
+//! suite). Offline we generate structural analogs: each generator
+//! controls exactly the properties SpMV/solver performance depends on —
+//! dimension, nnz, row-length distribution, and column-access locality —
+//! matched per origin class (circuit simulation, CFD stencils,
+//! unstructured FEM, saddle-point KKT, porous-media flow).
+
+pub mod circuit;
+pub mod fem;
+pub mod kkt;
+pub mod porous;
+pub mod stencil;
+pub mod suite;
+
+pub use suite::{table1, table1_entry, MatrixClass, SuiteEntry};
+
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+
+/// Structural statistics of a generated matrix (consumed by the perf
+/// model and printed by the table benches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    pub n: usize,
+    pub nnz: usize,
+    pub avg_row: f64,
+    pub max_row: usize,
+    /// Coefficient of variation of row lengths (0 = perfectly regular).
+    pub row_cv: f64,
+    /// Mean |col - row| distance normalized by n — proxy for the
+    /// column-access locality of the SpMV gather (0 = diagonal).
+    pub bandwidth_frac: f64,
+}
+
+impl MatrixStats {
+    /// Rescale to a target dimension, preserving shape statistics
+    /// (density, irregularity, locality). Used to project paper-size
+    /// performance from a scaled-down generated analog.
+    pub fn scaled_to(&self, n_target: usize, nnz_target: usize) -> Self {
+        let factor = n_target as f64 / self.n.max(1) as f64;
+        Self {
+            n: n_target,
+            nnz: nnz_target,
+            avg_row: nnz_target as f64 / n_target.max(1) as f64,
+            max_row: ((self.max_row as f64) * factor).round().max(1.0) as usize,
+            row_cv: self.row_cv,
+            bandwidth_frac: self.bandwidth_frac,
+        }
+    }
+
+    /// Compute stats from assembly data.
+    pub fn from_data<T: Value>(data: &MatrixData<T>) -> Self {
+        let n = data.dim.rows;
+        let nnz = data.nnz();
+        let lens = data.row_lengths();
+        let avg = nnz as f64 / n.max(1) as f64;
+        let var = lens
+            .iter()
+            .map(|&l| (l as f64 - avg) * (l as f64 - avg))
+            .sum::<f64>()
+            / n.max(1) as f64;
+        let max_row = lens.iter().copied().max().unwrap_or(0);
+        let mean_dist = if nnz == 0 {
+            0.0
+        } else {
+            data.entries
+                .iter()
+                .map(|e| (e.row - e.col).abs() as f64)
+                .sum::<f64>()
+                / nnz as f64
+                / n.max(1) as f64
+        };
+        Self {
+            n,
+            nnz,
+            avg_row: avg,
+            max_row,
+            row_cv: if avg > 0.0 { var.sqrt() / avg } else { 0.0 },
+            bandwidth_frac: mean_dist,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+
+    #[test]
+    fn stats_of_identity() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(10));
+        for i in 0..10 {
+            d.push(i, i, 1.0);
+        }
+        let s = MatrixStats::from_data(&d);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.nnz, 10);
+        assert_eq!(s.avg_row, 1.0);
+        assert_eq!(s.max_row, 1);
+        assert_eq!(s.row_cv, 0.0);
+        assert_eq!(s.bandwidth_frac, 0.0);
+    }
+
+    #[test]
+    fn stats_detect_irregularity() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(10));
+        for j in 0..10 {
+            d.push(0, j, 1.0); // one dense row
+        }
+        let s = MatrixStats::from_data(&d);
+        assert!(s.row_cv > 1.0);
+        assert!(s.bandwidth_frac > 0.1);
+    }
+}

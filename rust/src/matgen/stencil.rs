@@ -1,0 +1,178 @@
+//! Regular grid stencils: the CFD / thermal matrices of Table 1
+//! (atmosmodj: 7-pt 3-D advection stencil; thermal2: unstructured but
+//! stencil-like FEM thermal problem).
+//!
+//! All stencils are diagonally dominant, so every solver in the paper's
+//! set converges on them — matching the role these matrices play in §6.4.
+
+use crate::core::dim::Dim2;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+
+/// 5-point 2-D Laplacian on an `nx × ny` grid (SPD).
+pub fn laplace_2d<T: Value>(nx: usize, ny: usize) -> MatrixData<T> {
+    let n = nx * ny;
+    let mut d = MatrixData::new(Dim2::square(n));
+    let idx = |i: usize, j: usize| (i * ny + j) as i32;
+    for i in 0..nx {
+        for j in 0..ny {
+            let c = idx(i, j);
+            d.push(c, c, T::from_f64(4.0));
+            if i > 0 {
+                d.push(c, idx(i - 1, j), T::from_f64(-1.0));
+            }
+            if i + 1 < nx {
+                d.push(c, idx(i + 1, j), T::from_f64(-1.0));
+            }
+            if j > 0 {
+                d.push(c, idx(i, j - 1), T::from_f64(-1.0));
+            }
+            if j + 1 < ny {
+                d.push(c, idx(i, j + 1), T::from_f64(-1.0));
+            }
+        }
+    }
+    d.normalize();
+    d
+}
+
+/// 7-point 3-D stencil with an optional nonsymmetric advection term
+/// (`advect != 0` skews the ±x couplings) — the atmosmodj analog.
+pub fn stencil_3d<T: Value>(nx: usize, ny: usize, nz: usize, advect: f64) -> MatrixData<T> {
+    let n = nx * ny * nz;
+    let mut d = MatrixData::new(Dim2::square(n));
+    let idx = |i: usize, j: usize, k: usize| ((i * ny + j) * nz + k) as i32;
+    for i in 0..nx {
+        for j in 0..ny {
+            for k in 0..nz {
+                let c = idx(i, j, k);
+                d.push(c, c, T::from_f64(6.0 + advect.abs()));
+                if i > 0 {
+                    d.push(c, idx(i - 1, j, k), T::from_f64(-1.0 - advect));
+                }
+                if i + 1 < nx {
+                    d.push(c, idx(i + 1, j, k), T::from_f64(-1.0 + advect));
+                }
+                if j > 0 {
+                    d.push(c, idx(i, j - 1, k), T::from_f64(-1.0));
+                }
+                if j + 1 < ny {
+                    d.push(c, idx(i, j + 1, k), T::from_f64(-1.0));
+                }
+                if k > 0 {
+                    d.push(c, idx(i, j, k - 1), T::from_f64(-1.0));
+                }
+                if k + 1 < nz {
+                    d.push(c, idx(i, j, k + 1), T::from_f64(-1.0));
+                }
+            }
+        }
+    }
+    d.normalize();
+    d
+}
+
+/// 27-point 3-D stencil (dense couplings; the Bump/Cube_Coup analogs use
+/// it as the base block pattern).
+pub fn stencil_27pt<T: Value>(nx: usize, ny: usize, nz: usize) -> MatrixData<T> {
+    let n = nx * ny * nz;
+    let mut d = MatrixData::new(Dim2::square(n));
+    let idx = |i: usize, j: usize, k: usize| ((i * ny + j) * nz + k) as i32;
+    for i in 0..nx {
+        for j in 0..ny {
+            for k in 0..nz {
+                let c = idx(i, j, k);
+                for di in -1i64..=1 {
+                    for dj in -1i64..=1 {
+                        for dk in -1i64..=1 {
+                            let (ni, nj, nk) =
+                                (i as i64 + di, j as i64 + dj, k as i64 + dk);
+                            if ni < 0
+                                || nj < 0
+                                || nk < 0
+                                || ni >= nx as i64
+                                || nj >= ny as i64
+                                || nk >= nz as i64
+                            {
+                                continue;
+                            }
+                            let val = if di == 0 && dj == 0 && dk == 0 {
+                                26.5
+                            } else {
+                                -1.0
+                            };
+                            d.push(
+                                c,
+                                idx(ni as usize, nj as usize, nk as usize),
+                                T::from_f64(val),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    d.normalize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplace_2d_structure() {
+        let d = laplace_2d::<f64>(4, 4);
+        assert_eq!(d.dim.rows, 16);
+        // interior rows have 5 entries, corners 3
+        let lens = d.row_lengths();
+        assert_eq!(lens.iter().copied().max().unwrap(), 5);
+        assert_eq!(lens.iter().copied().min().unwrap(), 3);
+        // symmetric
+        let dense = d.to_dense_vec();
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(dense[i * 16 + j], dense[j * 16 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_3d_nnz_close_to_7_per_row() {
+        let d = stencil_3d::<f64>(8, 8, 8, 0.0);
+        let stats = crate::matgen::MatrixStats::from_data(&d);
+        assert_eq!(stats.n, 512);
+        assert!(stats.avg_row > 6.0 && stats.avg_row <= 7.0, "{stats:?}");
+        assert!(stats.row_cv < 0.2);
+    }
+
+    #[test]
+    fn advection_breaks_symmetry_but_not_dominance() {
+        let d = stencil_3d::<f64>(4, 4, 4, 0.3);
+        let dense = d.to_dense_vec();
+        let n = 64;
+        let mut sym = true;
+        for i in 0..n {
+            for j in 0..n {
+                if (dense[i * n + j] - dense[j * n + i]).abs() > 1e-12 {
+                    sym = false;
+                }
+            }
+        }
+        assert!(!sym);
+        for i in 0..n {
+            let diag = dense[i * n + i].abs();
+            let off: f64 = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| dense[i * n + j].abs())
+                .sum();
+            assert!(diag >= off, "row {i} lost dominance");
+        }
+    }
+
+    #[test]
+    fn stencil_27pt_max_row() {
+        let d = stencil_27pt::<f64>(4, 4, 4);
+        assert_eq!(d.row_lengths().iter().copied().max().unwrap(), 27);
+    }
+}

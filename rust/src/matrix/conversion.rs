@@ -1,0 +1,164 @@
+//! Format conversions.
+//!
+//! Ginkgo exposes `convert_to` between every pair of formats; here the
+//! generic path round-trips through `MatrixData` (always correct), with
+//! direct fast paths for the pairs that matter on the hot path
+//! (CSR ↔ COO, CSR → ELL).
+
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::reference::row_ptrs_to_idxs;
+use crate::matrix::coo::Coo;
+use crate::matrix::csr::Csr;
+use crate::matrix::ell::Ell;
+use crate::matrix::hybrid::Hybrid;
+use crate::matrix::sellp::SellP;
+
+/// CSR → COO without going through `MatrixData` (hot path: the XLA
+/// executor's CSR SpMV uses the same expansion).
+pub fn csr_to_coo<T: Value>(a: &Csr<T>) -> Result<Coo<T>> {
+    let rows = row_ptrs_to_idxs(a.row_ptrs(), a.nnz());
+    Coo::from_raw(
+        a.executor().clone(),
+        a.shape(),
+        rows,
+        a.col_idxs().to_vec(),
+        a.values().to_vec(),
+    )
+}
+
+/// COO → CSR without going through `MatrixData`.
+pub fn coo_to_csr<T: Value>(a: &Coo<T>) -> Result<Csr<T>> {
+    let n = a.shape().rows;
+    let mut row_ptrs: Vec<i32> = vec![0; n + 1];
+    for &r in a.row_idxs() {
+        row_ptrs[r as usize + 1] += 1;
+    }
+    for i in 0..n {
+        row_ptrs[i + 1] += row_ptrs[i];
+    }
+    Csr::from_raw(
+        a.executor().clone(),
+        a.shape(),
+        row_ptrs,
+        a.col_idxs().to_vec(),
+        a.values().to_vec(),
+    )
+}
+
+/// CSR → ELL padded to the longest row.
+pub fn csr_to_ell<T: Value>(a: &Csr<T>) -> Result<Ell<T>> {
+    Ell::from_data(a.executor().clone(), &a.to_data())
+}
+
+/// CSR → SELL-P with the default slice size.
+pub fn csr_to_sellp<T: Value>(a: &Csr<T>) -> Result<SellP<T>> {
+    SellP::from_data(a.executor().clone(), &a.to_data())
+}
+
+/// CSR → Hybrid with the default strategy.
+pub fn csr_to_hybrid<T: Value>(a: &Csr<T>) -> Result<Hybrid<T>> {
+    Hybrid::from_data(a.executor().clone(), &a.to_data())
+}
+
+/// Any format → any format via `MatrixData` (convenience for tests and
+/// the CLI's `convert` command).
+pub fn convert<T: Value, S, D>(src: &S, exec: Arc<Executor>) -> Result<D>
+where
+    S: ToData<T>,
+    D: FromData<T>,
+{
+    D::from_data_on(exec, &src.to_data_generic())
+}
+
+/// Formats that can export assembly data.
+pub trait ToData<T: Value> {
+    fn to_data_generic(&self) -> crate::core::matrix_data::MatrixData<T>;
+}
+
+/// Formats that can be built from assembly data.
+pub trait FromData<T: Value>: Sized {
+    fn from_data_on(
+        exec: Arc<Executor>,
+        data: &crate::core::matrix_data::MatrixData<T>,
+    ) -> Result<Self>;
+}
+
+macro_rules! impl_data_traits {
+    ($ty:ident) => {
+        impl<T: Value> ToData<T> for $ty<T> {
+            fn to_data_generic(&self) -> crate::core::matrix_data::MatrixData<T> {
+                self.to_data()
+            }
+        }
+        impl<T: Value> FromData<T> for $ty<T> {
+            fn from_data_on(
+                exec: Arc<Executor>,
+                data: &crate::core::matrix_data::MatrixData<T>,
+            ) -> Result<Self> {
+                $ty::from_data(exec, data)
+            }
+        }
+    };
+}
+
+impl_data_traits!(Coo);
+impl_data_traits!(Csr);
+impl_data_traits!(Ell);
+impl_data_traits!(SellP);
+impl_data_traits!(Hybrid);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::gen_sparse;
+
+    #[test]
+    fn csr_coo_round_trip() {
+        let mut rng = Prng::new(31);
+        let data = gen_sparse::<f64>(&mut rng, 60, 60, 4);
+        let csr = Csr::from_data(Executor::reference(), &data).unwrap();
+        let coo = csr_to_coo(&csr).unwrap();
+        let back = coo_to_csr(&coo).unwrap();
+        assert_eq!(back.row_ptrs(), csr.row_ptrs());
+        assert_eq!(back.col_idxs(), csr.col_idxs());
+        assert_eq!(back.values(), csr.values());
+    }
+
+    #[test]
+    fn every_pair_preserves_dense_image() {
+        let mut rng = Prng::new(77);
+        let data = gen_sparse::<f64>(&mut rng, 30, 30, 3);
+        let expect = data.to_dense_vec();
+        let exec = Executor::reference();
+        let csr = Csr::from_data(exec.clone(), &data).unwrap();
+
+        let coo: Coo<f64> = convert(&csr, exec.clone()).unwrap();
+        assert_eq!(coo.to_data().to_dense_vec(), expect);
+        let ell: Ell<f64> = convert(&coo, exec.clone()).unwrap();
+        assert_eq!(ell.to_data().to_dense_vec(), expect);
+        let sellp: SellP<f64> = convert(&ell, exec.clone()).unwrap();
+        assert_eq!(sellp.to_data().to_dense_vec(), expect);
+        let hybrid: Hybrid<f64> = convert(&sellp, exec.clone()).unwrap();
+        assert_eq!(hybrid.to_data().to_dense_vec(), expect);
+        let back: Csr<f64> = convert(&hybrid, exec).unwrap();
+        assert_eq!(back.to_data().to_dense_vec(), expect);
+    }
+
+    #[test]
+    fn direct_fast_paths_match_generic() {
+        let mut rng = Prng::new(5);
+        let data = gen_sparse::<f32>(&mut rng, 45, 45, 6);
+        let exec = Executor::reference();
+        let csr = Csr::from_data(exec.clone(), &data).unwrap();
+        let ell = csr_to_ell(&csr).unwrap();
+        let ell2: Ell<f32> = convert(&csr, exec).unwrap();
+        assert_eq!(ell.values(), ell2.values());
+        assert_eq!(ell.col_idxs(), ell2.col_idxs());
+    }
+}

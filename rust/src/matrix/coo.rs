@@ -1,0 +1,242 @@
+//! Coordinate (COO) sparse format.
+//!
+//! Stores one explicit `(row, col, value)` triplet per nonzero, sorted
+//! row-major. Memory footprint per nonzero: 1 value + 2 indices
+//! (16 B double / 12 B single — the arithmetic-intensity numbers of §5).
+//!
+//! This is the format the paper uses inside all Krylov solver benchmarks
+//! (§6.4) and one of the two formats in the SpMV study (§6.3).
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::{IndexType, Value};
+use crate::matrix::dense::Dense;
+
+/// COO sparse matrix (row-sorted).
+#[derive(Clone)]
+pub struct Coo<T> {
+    exec: Arc<Executor>,
+    dim: Dim2,
+    pub(crate) row_idxs: Vec<IndexType>,
+    pub(crate) col_idxs: Vec<IndexType>,
+    pub(crate) values: Vec<T>,
+    /// Bucket-padded, *device-resident* copies of (rows, cols, values)
+    /// for the XLA backend, built once on first apply when the matrix
+    /// fits a single nnz bucket (EXPERIMENTS.md §Perf, L3 iterations
+    /// 3-4). `Arc` keeps the struct Clone.
+    pub(crate) padded_cache: once_cell::unsync::OnceCell<
+        std::sync::Arc<(usize, xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>,
+    >,
+}
+
+impl<T: Value> Coo<T> {
+    /// Build from assembly data (normalizes a copy if needed).
+    pub fn from_data(exec: Arc<Executor>, data: &MatrixData<T>) -> Result<Self> {
+        data.validate()?;
+        let owned;
+        let src = if data.is_normalized() {
+            data
+        } else {
+            let mut d = data.clone();
+            d.normalize();
+            owned = d;
+            &owned
+        };
+        let nnz = src.nnz();
+        let mut row_idxs = Vec::with_capacity(nnz);
+        let mut col_idxs = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for e in &src.entries {
+            row_idxs.push(e.row);
+            col_idxs.push(e.col);
+            values.push(e.val);
+        }
+        Ok(Self {
+            exec,
+            dim: src.dim,
+            row_idxs,
+            col_idxs,
+            values,
+            padded_cache: once_cell::unsync::OnceCell::new(),
+        })
+    }
+
+    /// Build directly from raw sorted arrays (validated).
+    pub fn from_raw(
+        exec: Arc<Executor>,
+        dim: Dim2,
+        row_idxs: Vec<IndexType>,
+        col_idxs: Vec<IndexType>,
+        values: Vec<T>,
+    ) -> Result<Self> {
+        if row_idxs.len() != col_idxs.len() || row_idxs.len() != values.len() {
+            return Err(SparkleError::InvalidStructure(
+                "coo arrays disagree in length".into(),
+            ));
+        }
+        let sorted = row_idxs
+            .windows(2)
+            .all(|w| w[0] <= w[1]);
+        if !sorted {
+            return Err(SparkleError::InvalidStructure(
+                "coo row indices must be sorted".into(),
+            ));
+        }
+        let m = Self {
+            exec,
+            dim,
+            row_idxs,
+            col_idxs,
+            values,
+            padded_cache: once_cell::unsync::OnceCell::new(),
+        };
+        m.validate_bounds()?;
+        Ok(m)
+    }
+
+    fn validate_bounds(&self) -> Result<()> {
+        for i in 0..self.nnz() {
+            let (r, c) = (self.row_idxs[i], self.col_idxs[i]);
+            if r < 0 || c < 0 || r as usize >= self.dim.rows || c as usize >= self.dim.cols {
+                return Err(SparkleError::InvalidStructure(format!(
+                    "coo entry {i} at ({r},{c}) out of bounds for {}",
+                    self.dim
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row index array.
+    pub fn row_idxs(&self) -> &[IndexType] {
+        &self.row_idxs
+    }
+
+    /// Column index array.
+    pub fn col_idxs(&self) -> &[IndexType] {
+        &self.col_idxs
+    }
+
+    /// Value array.
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    /// Back to assembly form.
+    pub fn to_data(&self) -> MatrixData<T> {
+        let mut d = MatrixData::new(self.dim);
+        for i in 0..self.nnz() {
+            d.push(self.row_idxs[i], self.col_idxs[i], self.values[i]);
+        }
+        d
+    }
+
+    /// Rebind executor.
+    pub fn to_executor(&self, exec: Arc<Executor>) -> Self {
+        let mut c = self.clone();
+        c.exec = exec;
+        c
+    }
+}
+
+impl<T: Value> LinOp<T> for Coo<T> {
+    fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::coo_apply(&self.exec, self, b, x)
+    }
+
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::coo_apply_advanced(&self.exec, alpha, self, beta, b, x)
+    }
+
+    fn op_name(&self) -> &'static str {
+        "coo"
+    }
+}
+
+impl<T: Value> std::fmt::Debug for Coo<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Coo<{}>({}, nnz={})", T::PRECISION, self.dim, self.nnz())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_data() -> MatrixData<f64> {
+        MatrixData::from_triplets(
+            Dim2::square(3),
+            &[0, 0, 1, 2, 2],
+            &[0, 1, 1, 0, 2],
+            &[2.0, 1.0, 3.0, 4.0, 5.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_data_layout() {
+        let m = Coo::from_data(Executor::reference(), &sample_data()).unwrap();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row_idxs(), &[0, 0, 1, 2, 2]);
+        assert_eq!(m.col_idxs(), &[0, 1, 1, 0, 2]);
+        assert_eq!(m.values(), &[2.0, 1.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn from_unsorted_data_normalizes() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(2));
+        d.push(1, 0, 4.0);
+        d.push(0, 0, 1.0);
+        let m = Coo::from_data(Executor::reference(), &d).unwrap();
+        assert_eq!(m.row_idxs(), &[0, 1]);
+    }
+
+    #[test]
+    fn from_raw_rejects_unsorted() {
+        let r = Coo::from_raw(
+            Executor::reference(),
+            Dim2::square(2),
+            vec![1, 0],
+            vec![0, 0],
+            vec![1.0f64, 2.0],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn round_trip_via_data() {
+        let m = Coo::from_data(Executor::reference(), &sample_data()).unwrap();
+        let d2 = m.to_data();
+        assert_eq!(d2.to_dense_vec(), sample_data().to_dense_vec());
+    }
+
+    #[test]
+    fn apply_reference() {
+        let m = Coo::from_data(Executor::reference(), &sample_data()).unwrap();
+        let b = Dense::vector(Executor::reference(), &[1.0, 2.0, 3.0]);
+        let mut x = Dense::zeros(Executor::reference(), Dim2::new(3, 1));
+        m.apply(&b, &mut x).unwrap();
+        // [[2,1,0],[0,3,0],[4,0,5]] * [1,2,3] = [4, 6, 19]
+        assert_eq!(x.as_slice(), &[4.0, 6.0, 19.0]);
+    }
+}

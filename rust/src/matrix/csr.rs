@@ -1,0 +1,350 @@
+//! Compressed Sparse Row (CSR) format.
+//!
+//! Replaces COO's explicit row indices with `n+1` row pointers. Footprint
+//! per nonzero: 1 value + 1 index (12 B double / 8 B single, §5) plus the
+//! row-pointer array. This is the format oneMKL's vendor kernel operates
+//! on and one of the two formats in the paper's SpMV study.
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::{IndexType, Value};
+use crate::matrix::dense::Dense;
+
+/// CSR sparse matrix.
+#[derive(Clone)]
+pub struct Csr<T> {
+    exec: Arc<Executor>,
+    dim: Dim2,
+    pub(crate) row_ptrs: Vec<IndexType>,
+    pub(crate) col_idxs: Vec<IndexType>,
+    pub(crate) values: Vec<T>,
+    /// Lazily cached explicit row indices (COO expansion) — the XLA
+    /// backend's CSR SpMV dispatches to the segment-sum artifact and
+    /// would otherwise recompute this O(nnz) array every apply
+    /// (EXPERIMENTS.md §Perf, L3 iteration 2).
+    pub(crate) expanded_rows: once_cell::unsync::OnceCell<Vec<IndexType>>,
+}
+
+impl<T: Value> Csr<T> {
+    /// Build from assembly data.
+    pub fn from_data(exec: Arc<Executor>, data: &MatrixData<T>) -> Result<Self> {
+        data.validate()?;
+        let owned;
+        let src = if data.is_normalized() {
+            data
+        } else {
+            let mut d = data.clone();
+            d.normalize();
+            owned = d;
+            &owned
+        };
+        let nnz = src.nnz();
+        let mut row_ptrs = vec![0 as IndexType; src.dim.rows + 1];
+        for e in &src.entries {
+            row_ptrs[e.row as usize + 1] += 1;
+        }
+        for i in 0..src.dim.rows {
+            row_ptrs[i + 1] += row_ptrs[i];
+        }
+        let mut col_idxs = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for e in &src.entries {
+            col_idxs.push(e.col);
+            values.push(e.val);
+        }
+        Ok(Self {
+            exec,
+            dim: src.dim,
+            row_ptrs,
+            col_idxs,
+            values,
+            expanded_rows: once_cell::unsync::OnceCell::new(),
+        })
+    }
+
+    /// Build from raw CSR arrays (validated).
+    pub fn from_raw(
+        exec: Arc<Executor>,
+        dim: Dim2,
+        row_ptrs: Vec<IndexType>,
+        col_idxs: Vec<IndexType>,
+        values: Vec<T>,
+    ) -> Result<Self> {
+        if row_ptrs.len() != dim.rows + 1 {
+            return Err(SparkleError::InvalidStructure(format!(
+                "csr row_ptrs has {} entries for {} rows",
+                row_ptrs.len(),
+                dim.rows
+            )));
+        }
+        if col_idxs.len() != values.len() {
+            return Err(SparkleError::InvalidStructure(
+                "csr col/val arrays disagree".into(),
+            ));
+        }
+        if row_ptrs[0] != 0
+            || *row_ptrs.last().unwrap() as usize != values.len()
+            || row_ptrs.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err(SparkleError::InvalidStructure(
+                "csr row_ptrs not monotone from 0 to nnz".into(),
+            ));
+        }
+        if col_idxs
+            .iter()
+            .any(|&c| c < 0 || c as usize >= dim.cols)
+        {
+            return Err(SparkleError::InvalidStructure(
+                "csr column index out of bounds".into(),
+            ));
+        }
+        Ok(Self {
+            exec,
+            dim,
+            row_ptrs,
+            col_idxs,
+            values,
+            expanded_rows: once_cell::unsync::OnceCell::new(),
+        })
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row pointer array (`rows + 1` entries).
+    pub fn row_ptrs(&self) -> &[IndexType] {
+        &self.row_ptrs
+    }
+
+    /// Column index array.
+    pub fn col_idxs(&self) -> &[IndexType] {
+        &self.col_idxs
+    }
+
+    /// Explicit row indices (COO expansion), computed once and cached.
+    pub fn expanded_rows(&self) -> &[IndexType] {
+        self.expanded_rows.get_or_init(|| {
+            crate::kernels::reference::row_ptrs_to_idxs(&self.row_ptrs, self.values.len())
+        })
+    }
+
+    /// Value array.
+    pub fn values(&self) -> &[T] {
+        &self.values
+    }
+
+    /// Mutable values (used by Jacobi scaling tests and generators).
+    pub fn values_mut(&mut self) -> &mut [T] {
+        &mut self.values
+    }
+
+    /// Length of row `i`.
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.row_ptrs[i + 1] - self.row_ptrs[i]) as usize
+    }
+
+    /// Extract the diagonal (missing entries are zero).
+    pub fn extract_diagonal(&self) -> Vec<T> {
+        let n = self.dim.rows.min(self.dim.cols);
+        let mut diag = vec![T::zero(); n];
+        for i in 0..self.dim.rows.min(n) {
+            for k in self.row_ptrs[i] as usize..self.row_ptrs[i + 1] as usize {
+                if self.col_idxs[k] as usize == i {
+                    diag[i] = self.values[k];
+                }
+            }
+        }
+        diag
+    }
+
+    /// Transposed copy (direct CSC-style pass, no MatrixData detour).
+    pub fn transpose(&self) -> Result<Csr<T>> {
+        let (rows, cols) = (self.dim.rows, self.dim.cols);
+        let nnz = self.nnz();
+        // count entries per column -> transposed row pointers
+        let mut t_ptrs = vec![0 as IndexType; cols + 1];
+        for &c in &self.col_idxs {
+            t_ptrs[c as usize + 1] += 1;
+        }
+        for i in 0..cols {
+            t_ptrs[i + 1] += t_ptrs[i];
+        }
+        let mut t_cols = vec![0 as IndexType; nnz];
+        let mut t_vals = vec![T::zero(); nnz];
+        let mut cursor = t_ptrs.clone();
+        for i in 0..rows {
+            for k in self.row_ptrs[i] as usize..self.row_ptrs[i + 1] as usize {
+                let c = self.col_idxs[k] as usize;
+                let pos = cursor[c] as usize;
+                t_cols[pos] = i as IndexType;
+                t_vals[pos] = self.values[k];
+                cursor[c] += 1;
+            }
+        }
+        Csr::from_raw(
+            self.exec.clone(),
+            self.dim.transposed(),
+            t_ptrs,
+            t_cols,
+            t_vals,
+        )
+    }
+
+    /// Back to assembly form.
+    pub fn to_data(&self) -> MatrixData<T> {
+        let mut d = MatrixData::new(self.dim);
+        for i in 0..self.dim.rows {
+            for k in self.row_ptrs[i] as usize..self.row_ptrs[i + 1] as usize {
+                d.push(i as IndexType, self.col_idxs[k], self.values[k]);
+            }
+        }
+        d
+    }
+
+    /// Rebind executor.
+    pub fn to_executor(&self, exec: Arc<Executor>) -> Self {
+        let mut c = self.clone();
+        c.exec = exec;
+        c
+    }
+}
+
+impl<T: Value> LinOp<T> for Csr<T> {
+    fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::csr_apply(&self.exec, self, b, x)
+    }
+
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::csr_apply_advanced(&self.exec, alpha, self, beta, b, x)
+    }
+
+    fn op_name(&self) -> &'static str {
+        "csr"
+    }
+}
+
+impl<T: Value> std::fmt::Debug for Csr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Csr<{}>({}, nnz={})", T::PRECISION, self.dim, self.nnz())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_data() -> MatrixData<f64> {
+        MatrixData::from_triplets(
+            Dim2::square(3),
+            &[0, 0, 1, 2, 2],
+            &[0, 1, 1, 0, 2],
+            &[2.0, 1.0, 3.0, 4.0, 5.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_data_layout() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        assert_eq!(m.row_ptrs(), &[0, 2, 3, 5]);
+        assert_eq!(m.col_idxs(), &[0, 1, 1, 0, 2]);
+        assert_eq!(m.row_len(0), 2);
+        assert_eq!(m.row_len(1), 1);
+    }
+
+    #[test]
+    fn from_raw_validation() {
+        let e = Executor::reference();
+        // bad row_ptrs length
+        assert!(Csr::<f64>::from_raw(e.clone(), Dim2::square(2), vec![0, 1], vec![0], vec![1.0])
+            .is_err());
+        // non-monotone
+        assert!(Csr::<f64>::from_raw(
+            e.clone(),
+            Dim2::square(2),
+            vec![0, 2, 1],
+            vec![0],
+            vec![1.0]
+        )
+        .is_err());
+        // column out of bounds
+        assert!(Csr::<f64>::from_raw(
+            e.clone(),
+            Dim2::square(2),
+            vec![0, 1, 1],
+            vec![5],
+            vec![1.0]
+        )
+        .is_err());
+        // good
+        assert!(Csr::<f64>::from_raw(e, Dim2::square(2), vec![0, 1, 1], vec![1], vec![1.0])
+            .is_ok());
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        assert_eq!(m.extract_diagonal(), vec![2.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn round_trip_via_data() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        assert_eq!(m.to_data().to_dense_vec(), sample_data().to_dense_vec());
+    }
+
+    #[test]
+    fn apply_reference() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        let b = Dense::vector(Executor::reference(), &[1.0, 2.0, 3.0]);
+        let mut x = Dense::zeros(Executor::reference(), Dim2::new(3, 1));
+        m.apply(&b, &mut x).unwrap();
+        assert_eq!(x.as_slice(), &[4.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn transpose_direct_matches_data_transpose() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        let t = m.transpose().unwrap();
+        assert_eq!(
+            t.to_data().to_dense_vec(),
+            sample_data().transpose().to_dense_vec()
+        );
+        // rectangular
+        let mut d = MatrixData::<f64>::new(Dim2::new(2, 3));
+        d.push(0, 2, 7.0);
+        d.push(1, 0, -2.0);
+        d.normalize();
+        let m = Csr::from_data(Executor::reference(), &d).unwrap();
+        let t = m.transpose().unwrap();
+        assert_eq!(t.shape(), Dim2::new(3, 2));
+        assert_eq!(t.to_data().to_dense_vec(), d.transpose().to_dense_vec());
+    }
+
+    #[test]
+    fn apply_advanced_reference() {
+        let m = Csr::from_data(Executor::reference(), &sample_data()).unwrap();
+        let b = Dense::vector(Executor::reference(), &[1.0, 2.0, 3.0]);
+        let mut x = Dense::vector(Executor::reference(), &[1.0, 1.0, 1.0]);
+        // x = 2*A*b - 1*x
+        m.apply_advanced(2.0, &b, -1.0, &mut x).unwrap();
+        assert_eq!(x.as_slice(), &[7.0, 11.0, 37.0]);
+    }
+}

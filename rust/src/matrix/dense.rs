@@ -1,0 +1,268 @@
+//! Dense matrix / (multi-)vector, row-major.
+//!
+//! In Ginkgo `Dense` doubles as the vector type: a vector is an `n × 1`
+//! dense matrix, a block of `k` right-hand sides an `n × k` one. Solvers
+//! and SpMV kernels follow that convention here.
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+
+/// Row-major dense matrix with executor affinity.
+#[derive(Clone)]
+pub struct Dense<T> {
+    exec: Arc<Executor>,
+    dim: Dim2,
+    values: Vec<T>,
+}
+
+impl<T: Value> Dense<T> {
+    /// Zero-initialized matrix.
+    pub fn zeros(exec: Arc<Executor>, dim: Dim2) -> Self {
+        Self {
+            exec,
+            dim,
+            values: vec![T::zero(); dim.count()],
+        }
+    }
+
+    /// Constant-filled matrix.
+    pub fn filled(exec: Arc<Executor>, dim: Dim2, value: T) -> Self {
+        Self {
+            exec,
+            dim,
+            values: vec![value; dim.count()],
+        }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(exec: Arc<Executor>, dim: Dim2, values: Vec<T>) -> Result<Self> {
+        if values.len() != dim.count() {
+            return Err(SparkleError::dim(
+                "dense::from_vec",
+                format!("{} values for {}", values.len(), dim),
+            ));
+        }
+        Ok(Self { exec, dim, values })
+    }
+
+    /// Column vector from a slice.
+    pub fn vector(exec: Arc<Executor>, values: &[T]) -> Self {
+        Self {
+            exec,
+            dim: Dim2::new(values.len(), 1),
+            values: values.to_vec(),
+        }
+    }
+
+    /// Dimensions.
+    pub fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    /// Number of rows (vector length for n×1).
+    pub fn len(&self) -> usize {
+        self.dim.rows
+    }
+
+    /// True if the matrix holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.dim.count() == 0
+    }
+
+    /// Executor this object is bound to.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    /// Raw row-major values.
+    pub fn as_slice(&self) -> &[T] {
+        &self.values
+    }
+
+    /// Mutable raw values.
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.values
+    }
+
+    /// Entry accessor (row, col).
+    pub fn at(&self, row: usize, col: usize) -> T {
+        debug_assert!(row < self.dim.rows && col < self.dim.cols);
+        self.values[row * self.dim.cols + col]
+    }
+
+    /// Mutable entry accessor.
+    pub fn at_mut(&mut self, row: usize, col: usize) -> &mut T {
+        debug_assert!(row < self.dim.rows && col < self.dim.cols);
+        &mut self.values[row * self.dim.cols + col]
+    }
+
+    /// Overwrite every entry.
+    pub fn fill(&mut self, value: T) {
+        self.values.fill(value);
+    }
+
+    /// Copy values from another dense of identical shape.
+    pub fn copy_from(&mut self, other: &Dense<T>) -> Result<()> {
+        if self.dim != other.dim {
+            return Err(SparkleError::dim(
+                "dense::copy_from",
+                format!("{} vs {}", self.dim, other.dim),
+            ));
+        }
+        self.values.copy_from_slice(&other.values);
+        Ok(())
+    }
+
+    /// Rebind to a different executor (host memory is shared, so this is
+    /// a metadata change — mirrors Ginkgo's `clone(exec)`).
+    pub fn to_executor(&self, exec: Arc<Executor>) -> Self {
+        Self {
+            exec,
+            dim: self.dim,
+            values: self.values.clone(),
+        }
+    }
+
+    /// Convert values to another precision.
+    pub fn convert<U: Value>(&self) -> Dense<U> {
+        Dense {
+            exec: self.exec.clone(),
+            dim: self.dim,
+            values: self.values.iter().map(|v| U::from_f64(v.as_f64())).collect(),
+        }
+    }
+
+    /// Euclidean norm of the whole buffer computed in f64 (host-side;
+    /// used by tests and stopping criteria bootstrapping).
+    pub fn norm2_host(&self) -> f64 {
+        self.values
+            .iter()
+            .map(|v| {
+                let x = v.as_f64();
+                x * x
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl<T: Value> std::fmt::Debug for Dense<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Dense<{}>({})", T::PRECISION, self.dim)
+    }
+}
+
+/// Dense mat-vec: x = A b (reference implementation only — dense apply is
+/// not on the paper's hot path; it exists for GMRES Hessenberg handling
+/// and tests).
+impl<T: Value> LinOp<T> for Dense<T> {
+    fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        let (m, n, k) = (self.dim.rows, self.dim.cols, b.shape().cols);
+        for i in 0..m {
+            for c in 0..k {
+                let mut acc = T::zero();
+                for j in 0..n {
+                    acc += self.at(i, j) * b.at(j, c);
+                }
+                *x.at_mut(i, c) = acc;
+            }
+        }
+        Ok(())
+    }
+
+    fn op_name(&self) -> &'static str {
+        "dense"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec() -> Arc<Executor> {
+        Executor::reference()
+    }
+
+    #[test]
+    fn zeros_filled_vector() {
+        let z = Dense::<f64>::zeros(exec(), Dim2::new(2, 3));
+        assert_eq!(z.as_slice(), &[0.0; 6]);
+        let f = Dense::<f32>::filled(exec(), Dim2::new(2, 2), 7.0);
+        assert_eq!(f.as_slice(), &[7.0; 4]);
+        let v = Dense::vector(exec(), &[1.0f64, 2.0]);
+        assert_eq!(v.shape(), Dim2::new(2, 1));
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn from_vec_checks_size() {
+        assert!(Dense::from_vec(exec(), Dim2::new(2, 2), vec![1.0f64; 3]).is_err());
+        assert!(Dense::from_vec(exec(), Dim2::new(2, 2), vec![1.0f64; 4]).is_ok());
+    }
+
+    #[test]
+    fn indexing() {
+        let mut a = Dense::from_vec(exec(), Dim2::new(2, 3), (0..6).map(f64::from).collect())
+            .unwrap();
+        assert_eq!(a.at(0, 0), 0.0);
+        assert_eq!(a.at(1, 2), 5.0);
+        *a.at_mut(1, 0) = 10.0;
+        assert_eq!(a.at(1, 0), 10.0);
+    }
+
+    #[test]
+    fn copy_from_and_fill() {
+        let mut a = Dense::<f64>::zeros(exec(), Dim2::new(2, 2));
+        let b = Dense::filled(exec(), Dim2::new(2, 2), 3.0);
+        a.copy_from(&b).unwrap();
+        assert_eq!(a.as_slice(), &[3.0; 4]);
+        a.fill(1.0);
+        assert_eq!(a.as_slice(), &[1.0; 4]);
+        let c = Dense::<f64>::zeros(exec(), Dim2::new(3, 2));
+        assert!(a.copy_from(&c).is_err());
+    }
+
+    #[test]
+    fn dense_apply_matvec() {
+        let a = Dense::from_vec(
+            exec(),
+            Dim2::new(2, 3),
+            vec![1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap();
+        let b = Dense::vector(exec(), &[1.0, 0.0, -1.0]);
+        let mut x = Dense::zeros(exec(), Dim2::new(2, 1));
+        a.apply(&b, &mut x).unwrap();
+        assert_eq!(x.as_slice(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn dense_apply_rejects_mismatch() {
+        let a = Dense::<f64>::zeros(exec(), Dim2::new(2, 3));
+        let b = Dense::vector(exec(), &[1.0, 0.0]);
+        let mut x = Dense::zeros(exec(), Dim2::new(2, 1));
+        assert!(a.apply(&b, &mut x).is_err());
+    }
+
+    #[test]
+    fn precision_convert_and_norm() {
+        let v = Dense::vector(exec(), &[3.0f64, 4.0]);
+        assert!((v.norm2_host() - 5.0).abs() < 1e-15);
+        let s: Dense<f32> = v.convert();
+        assert_eq!(s.as_slice(), &[3.0f32, 4.0]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Hybrid (ELL + COO) format.
+//!
+//! Stores the regular part of each row (up to a width chosen from the
+//! row-length distribution) in ELL and spills the remainder into COO.
+//! This keeps power-law matrices (circuit5M, FullChip — §6's hardest
+//! cases) SIMD-friendly without ELL's padding explosion.
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::Result;
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::matrix::coo::Coo;
+use crate::matrix::dense::Dense;
+use crate::matrix::ell::Ell;
+
+/// Strategy for choosing the ELL width.
+#[derive(Debug, Clone, Copy)]
+pub enum HybridStrategy {
+    /// Fixed ELL width.
+    Fixed(usize),
+    /// Width = the `q`-quantile of row lengths (Ginkgo's `imbalance_limit`
+    /// approach; default q = 0.8).
+    Percentile(f64),
+}
+
+impl Default for HybridStrategy {
+    fn default() -> Self {
+        HybridStrategy::Percentile(0.8)
+    }
+}
+
+/// Hybrid sparse matrix: `A = ell_part + coo_part`.
+#[derive(Clone)]
+pub struct Hybrid<T> {
+    exec: Arc<Executor>,
+    dim: Dim2,
+    pub(crate) ell: Ell<T>,
+    pub(crate) coo: Coo<T>,
+}
+
+impl<T: Value> Hybrid<T> {
+    /// Build with the default percentile strategy.
+    pub fn from_data(exec: Arc<Executor>, data: &MatrixData<T>) -> Result<Self> {
+        Self::from_data_with_strategy(exec, data, HybridStrategy::default())
+    }
+
+    /// Build with an explicit strategy.
+    pub fn from_data_with_strategy(
+        exec: Arc<Executor>,
+        data: &MatrixData<T>,
+        strategy: HybridStrategy,
+    ) -> Result<Self> {
+        data.validate()?;
+        let owned;
+        let src = if data.is_normalized() {
+            data
+        } else {
+            let mut d = data.clone();
+            d.normalize();
+            owned = d;
+            &owned
+        };
+        let width = match strategy {
+            HybridStrategy::Fixed(w) => w,
+            HybridStrategy::Percentile(q) => {
+                let mut lens = src.row_lengths();
+                lens.sort_unstable();
+                if lens.is_empty() {
+                    0
+                } else {
+                    let idx = ((lens.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+                    lens[idx]
+                }
+            }
+        };
+        let mut ell_data = MatrixData::new(src.dim);
+        let mut coo_data = MatrixData::new(src.dim);
+        let mut fill = vec![0usize; src.dim.rows];
+        for e in &src.entries {
+            let i = e.row as usize;
+            if fill[i] < width {
+                ell_data.push(e.row, e.col, e.val);
+                fill[i] += 1;
+            } else {
+                coo_data.push(e.row, e.col, e.val);
+            }
+        }
+        Ok(Self {
+            exec: exec.clone(),
+            dim: src.dim,
+            ell: Ell::from_data_with_width(exec.clone(), &ell_data, width)?,
+            coo: Coo::from_data(exec, &coo_data)?,
+        })
+    }
+
+    /// ELL partition.
+    pub fn ell_part(&self) -> &Ell<T> {
+        &self.ell
+    }
+
+    /// COO partition.
+    pub fn coo_part(&self) -> &Coo<T> {
+        &self.coo
+    }
+
+    /// Actual nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.ell.nnz() + self.coo.nnz()
+    }
+
+    /// Back to assembly form.
+    pub fn to_data(&self) -> MatrixData<T> {
+        let mut d = self.ell.to_data();
+        d.entries.extend(self.coo.to_data().entries);
+        d.normalize();
+        d
+    }
+
+    /// Rebind executor.
+    pub fn to_executor(&self, exec: Arc<Executor>) -> Self {
+        Self {
+            exec: exec.clone(),
+            dim: self.dim,
+            ell: self.ell.to_executor(exec.clone()),
+            coo: self.coo.to_executor(exec),
+        }
+    }
+}
+
+impl<T: Value> LinOp<T> for Hybrid<T> {
+    fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        // x = ell * b; x += coo * b
+        self.ell.apply(b, x)?;
+        crate::kernels::spmv::coo_apply_advanced(
+            &self.exec,
+            T::one(),
+            &self.coo,
+            T::one(),
+            b,
+            x,
+        )
+    }
+
+    fn op_name(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+impl<T: Value> std::fmt::Debug for Hybrid<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Hybrid<{}>({}, ell_width={}, coo_nnz={})",
+            T::PRECISION,
+            self.dim,
+            self.ell.stored_per_row(),
+            self.coo.nnz()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::IndexType;
+
+    fn skewed_data() -> MatrixData<f64> {
+        // row 0 has 8 entries, rows 1..7 have 1
+        let n = 8;
+        let mut d = MatrixData::new(Dim2::square(n));
+        for j in 0..n {
+            d.push(0, j as IndexType, (j + 1) as f64);
+        }
+        for i in 1..n {
+            d.push(i as IndexType, i as IndexType, 2.0);
+        }
+        d.normalize();
+        d
+    }
+
+    #[test]
+    fn percentile_strategy_splits() {
+        let m = Hybrid::from_data(Executor::reference(), &skewed_data()).unwrap();
+        // 80th percentile of row lengths [8,1,1,1,1,1,1,1] sorted -> 1
+        assert_eq!(m.ell_part().stored_per_row(), 1);
+        assert_eq!(m.coo_part().nnz(), 7); // row 0 spill
+        assert_eq!(m.nnz(), 15);
+    }
+
+    #[test]
+    fn fixed_strategy() {
+        let m = Hybrid::from_data_with_strategy(
+            Executor::reference(),
+            &skewed_data(),
+            HybridStrategy::Fixed(4),
+        )
+        .unwrap();
+        assert_eq!(m.ell_part().stored_per_row(), 4);
+        assert_eq!(m.coo_part().nnz(), 4);
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let d = skewed_data();
+        let m = Hybrid::from_data(Executor::reference(), &d).unwrap();
+        let b_vals: Vec<f64> = (0..8).map(|i| (i as f64) - 3.0).collect();
+        let b = Dense::vector(Executor::reference(), &b_vals);
+        let mut x = Dense::zeros(Executor::reference(), Dim2::new(8, 1));
+        m.apply(&b, &mut x).unwrap();
+        // dense check
+        let dense = d.to_dense_vec();
+        for i in 0..8 {
+            let expect: f64 = (0..8).map(|j| dense[i * 8 + j] * b_vals[j]).sum();
+            assert!((x.as_slice()[i] - expect).abs() < 1e-12, "row {i}");
+        }
+    }
+
+    #[test]
+    fn round_trip_via_data() {
+        let d = skewed_data();
+        let m = Hybrid::from_data(Executor::reference(), &d).unwrap();
+        assert_eq!(m.to_data().to_dense_vec(), d.to_dense_vec());
+    }
+}

@@ -1,0 +1,18 @@
+//! Matrix formats: dense plus the sparse formats of the paper's study
+//! (COO, CSR) and Ginkgo's wider format zoo (ELL, SELL-P, Hybrid) used by
+//! the format-ablation benches.
+
+pub mod conversion;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod ell;
+pub mod hybrid;
+pub mod sellp;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use ell::Ell;
+pub use hybrid::Hybrid;
+pub use sellp::SellP;

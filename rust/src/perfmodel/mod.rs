@@ -1,0 +1,29 @@
+//! Analytic GPU performance model — the testbed substitute.
+//!
+//! The paper's evaluation hardware (Intel GEN9/GEN12 via DevCloud, NVIDIA
+//! V100, AMD RadeonVII) is not attached to this environment, so the
+//! figures are reproduced through a calibrated roofline model — the same
+//! methodology the paper itself uses in §6.2/§6.3 to derive its
+//! performance bounds (measured bandwidth × arithmetic intensity), here
+//! extended with per-kernel traffic accounting and locality/balance
+//! penalties so per-matrix scatter emerges from matrix *structure*.
+//!
+//! Calibration sources (all from the paper):
+//! * Fig. 6 / §6.2 — measured peak bandwidths (37 / 58 GB/s), saturating
+//!   curve shape, DOT sync penalty.
+//! * Fig. 7 — precision-specific arithmetic peaks (GEN9 105/430/810
+//!   GFLOP/s, GEN12 8/2200/4000).
+//! * §6.3 — SpMV efficiency vs roofline bound (CSR 5.1 of 6, COO 3.8 of
+//!   4.6 on GEN9; both near bound on GEN12).
+//! * §6.5 / Fig. 10 — relative-to-peak bands per platform (~90% GEN12 /
+//!   CUDA-class, 60–70% GEN9 / RadeonVII).
+
+pub mod device;
+pub mod project;
+pub mod roofline;
+pub mod traffic;
+
+pub use device::{Device, DeviceSpec};
+pub use project::{project_solver, project_spmv, SpmvProjection};
+pub use roofline::Roofline;
+pub use traffic::{spmv_flops, spmv_traffic, SpmvKernelKind};

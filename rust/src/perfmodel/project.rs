@@ -1,0 +1,299 @@
+//! Projection: matrix × kernel × device → GFLOP/s and achieved GB/s.
+//!
+//! This produces the series of Fig. 8 (SpMV GFLOP/s), Fig. 9 (solver
+//! GFLOP/s) and Fig. 10 (bandwidth relative to theoretical peak).
+
+use crate::core::types::Precision;
+use crate::matgen::MatrixStats;
+use crate::perfmodel::device::{Device, DeviceSpec};
+use crate::perfmodel::roofline::Roofline;
+use crate::perfmodel::traffic::{spmv_flops, spmv_traffic, spmv_useful_bytes, SpmvKernelKind};
+
+/// Whose SpMV implementation: sparkle's or the vendor library's
+/// (oneMKL / cuSPARSE / hipSPARSE depending on the device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Implementation {
+    Sparkle,
+    Vendor,
+}
+
+/// Result of one SpMV projection.
+#[derive(Debug, Clone)]
+pub struct SpmvProjection {
+    /// Projected throughput.
+    pub gflops: f64,
+    /// Achieved bandwidth (useful bytes / time).
+    pub gbs: f64,
+    /// Achieved bandwidth relative to the *theoretical* device peak
+    /// (the Fig. 10 y-axis).
+    pub relative_bw: f64,
+    /// The §6.3-style roofline upper bound for this kernel/device.
+    pub roofline_bound_gflops: f64,
+    /// Estimated execution time, microseconds.
+    pub time_us: f64,
+}
+
+/// Efficiency factor of a kernel implementation on a given structure.
+///
+/// Mechanistic, not random: row-parallel kernels lose efficiency to row-
+/// length imbalance; the vendor kernel vectorizes long regular rows
+/// better but degrades harder on irregular ones (which is exactly the
+/// "inconsistent, outperforming for some cases, underperforming for
+/// others" behaviour §6.5 reports for oneMKL on GEN12).
+fn impl_efficiency(
+    imp: Implementation,
+    kind: SpmvKernelKind,
+    stats: &MatrixStats,
+    dev: &DeviceSpec,
+) -> f64 {
+    let base = dev.spmv_efficiency;
+    match imp {
+        Implementation::Sparkle => match kind {
+            // balanced-by-nonzeros: insensitive to row imbalance
+            SpmvKernelKind::Coo => base,
+            // row-parallel: mild imbalance penalty
+            SpmvKernelKind::Csr => base / (1.0 + 0.10 * stats.row_cv),
+            // SIMD-regular storage: slightly better base behaviour
+            SpmvKernelKind::Ell | SpmvKernelKind::SellP => (base * 1.03).min(0.97),
+        },
+        Implementation::Vendor => {
+            // long regular rows vectorize well (+ up to 20%), short or
+            // irregular rows underutilize the vendor kernel's fixed
+            // chunking (hard penalty on row_cv)
+            let regular_bonus = 1.0 + 0.20 * ((stats.avg_row - 8.0) / 24.0).clamp(-0.5, 1.0);
+            let imbalance = 1.0 / (1.0 + 0.35 * stats.row_cv);
+            (base * regular_bonus * imbalance).min(0.98)
+        }
+    }
+}
+
+/// Project one SpMV.
+pub fn project_spmv(
+    device: Device,
+    imp: Implementation,
+    kind: SpmvKernelKind,
+    stats: &MatrixStats,
+    p: Precision,
+) -> SpmvProjection {
+    let spec = device.spec();
+    let roof = Roofline::new(spec.clone());
+    let bytes = spmv_traffic(kind, stats, p, &spec);
+    let flops = spmv_flops(stats);
+    let eff = impl_efficiency(imp, kind, stats, &spec);
+    let bw = roof.bandwidth_at(bytes) * eff; // GB/s
+    // bandwidth-bound time + launch overhead; arithmetic ceiling applies
+    // to the emulated-double case (GEN12 fp64: 8 GFLOP/s dominates)
+    let t_mem_us = bytes / (bw * 1e3); // bytes / (GB/s) -> ns ; /1e3 -> us
+    let t_compute_us = flops / (spec.peak_at(p) * 1e3);
+    let time_us = t_mem_us.max(t_compute_us) + spec.launch_overhead_us;
+    let gflops = flops / (time_us * 1e3);
+    let gbs = spmv_useful_bytes(kind, stats, p) / (time_us * 1e3);
+    // Fig. 10 accounting: achieved bandwidth inferred from throughput via
+    // the §5 simple-model intensity (GFLOP/s ÷ (flop/byte)), relative to
+    // the datasheet peak — this reproduces the paper's own derivation
+    // chain (5.1 GFLOP/s × 6 B/flop = 30.6 GB/s ≈ 70% of 41.6 on GEN9)
+    let inferred_bw = gflops / kind.paper_intensity(p);
+    SpmvProjection {
+        gflops,
+        gbs,
+        relative_bw: inferred_bw / spec.bw_theoretical,
+        roofline_bound_gflops: roof
+            .attainable_gflops(kind.paper_intensity(p), p),
+        time_us,
+    }
+}
+
+/// Project a full solver run: `iters` iterations of a solver described
+/// by its per-iteration flops/bytes (from the `Solver` trait) plus the
+/// per-iteration dispatch count (GMRES pays extra host round-trips —
+/// §6.4's observation that GMRES lags on the ported backend).
+#[allow(clippy::too_many_arguments)]
+pub fn project_solver(
+    device: Device,
+    flops_per_iter: u64,
+    bytes_per_iter: u64,
+    dispatches_per_iter: u64,
+    host_work_us_per_iter: f64,
+    p: Precision,
+    iters: usize,
+) -> (f64 /* GFLOP/s */, f64 /* time ms */) {
+    let spec = device.spec();
+    let roof = Roofline::new(spec.clone());
+    let bytes = bytes_per_iter as f64;
+    let bw = roof.bandwidth_at(bytes) * spec.spmv_efficiency * spec.solver_efficiency;
+    let t_mem_us = bytes / (bw * 1e3);
+    let t_compute_us = flops_per_iter as f64 / (spec.peak_at(p) * 1e3);
+    let per_iter_us = t_mem_us.max(t_compute_us)
+        + dispatches_per_iter as f64 * spec.launch_overhead_us
+        + host_work_us_per_iter;
+    let total_us = per_iter_us * iters as f64;
+    let gflops = (flops_per_iter as f64 * iters as f64) / (total_us * 1e3);
+    (gflops, total_us / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(n: usize, nnz: usize, max_row: usize, cv: f64, bw: f64) -> MatrixStats {
+        MatrixStats {
+            n,
+            nnz,
+            avg_row: nnz as f64 / n as f64,
+            max_row,
+            row_cv: cv,
+            bandwidth_frac: bw,
+        }
+    }
+
+    /// §6.3: on GEN9/double, sparkle CSR should project close to the
+    /// paper's measured 5.1 GFLOP/s (bound 6) and COO close to 3.8
+    /// (bound 4.6), for a large well-behaved matrix.
+    #[test]
+    fn gen9_double_matches_paper_measurements() {
+        let s = stats(2_000_000, 16_000_000, 10, 0.15, 0.002);
+        let csr = project_spmv(
+            Device::Gen9,
+            Implementation::Sparkle,
+            SpmvKernelKind::Csr,
+            &s,
+            Precision::Double,
+        );
+        assert!(
+            (4.4..5.8).contains(&csr.gflops),
+            "GEN9 CSR projected {:.2} GFLOP/s (paper: ~5.1)",
+            csr.gflops
+        );
+        let coo = project_spmv(
+            Device::Gen9,
+            Implementation::Sparkle,
+            SpmvKernelKind::Coo,
+            &s,
+            Precision::Double,
+        );
+        assert!(
+            (3.2..4.4).contains(&coo.gflops),
+            "GEN9 COO projected {:.2} GFLOP/s (paper: ~3.8)",
+            coo.gflops
+        );
+        assert!(csr.gflops > coo.gflops);
+    }
+
+    /// §6.3: on GEN12/single both formats run near their bounds
+    /// (14.5 / 9.7 GFLOP/s).
+    #[test]
+    fn gen12_single_near_roofline() {
+        let s = stats(2_000_000, 16_000_000, 10, 0.15, 0.002);
+        let csr = project_spmv(
+            Device::Gen12,
+            Implementation::Sparkle,
+            SpmvKernelKind::Csr,
+            &s,
+            Precision::Single,
+        );
+        assert!(
+            csr.gflops > 0.75 * csr.roofline_bound_gflops,
+            "GEN12 CSR {:.2} of bound {:.2}",
+            csr.gflops,
+            csr.roofline_bound_gflops
+        );
+        let coo = project_spmv(
+            Device::Gen12,
+            Implementation::Sparkle,
+            SpmvKernelKind::Coo,
+            &s,
+            Precision::Single,
+        );
+        assert!(coo.gflops > 0.75 * coo.roofline_bound_gflops);
+    }
+
+    /// GEN12 double emulation collapses to the 8 GFLOP/s ceiling.
+    #[test]
+    fn gen12_double_emulation_ceiling() {
+        let s = stats(2_000_000, 16_000_000, 10, 0.15, 0.002);
+        let csr = project_spmv(
+            Device::Gen12,
+            Implementation::Sparkle,
+            SpmvKernelKind::Csr,
+            &s,
+            Precision::Double,
+        );
+        assert!(csr.gflops <= 8.0);
+        // and single precision beats it by a lot
+        let csr_s = project_spmv(
+            Device::Gen12,
+            Implementation::Sparkle,
+            SpmvKernelKind::Csr,
+            &s,
+            Precision::Single,
+        );
+        assert!(csr_s.gflops > 1.2 * csr.gflops);
+    }
+
+    /// §6.5's vendor inconsistency: vendor wins on long regular rows,
+    /// loses on irregular circuit-like rows.
+    #[test]
+    fn vendor_inconsistency_is_structural() {
+        let regular = stats(2_000_000, 56_000_000, 30, 0.1, 0.002); // Cube_Coup-like
+        let irregular = stats(3_000_000, 27_000_000, 10_000, 4.0, 0.15); // FullChip-like
+        let p = Precision::Single;
+        let dev = Device::Gen12;
+        let v_reg = project_spmv(dev, Implementation::Vendor, SpmvKernelKind::Csr, &regular, p);
+        let s_reg = project_spmv(dev, Implementation::Sparkle, SpmvKernelKind::Csr, &regular, p);
+        let v_irr = project_spmv(dev, Implementation::Vendor, SpmvKernelKind::Csr, &irregular, p);
+        let s_irr = project_spmv(dev, Implementation::Sparkle, SpmvKernelKind::Csr, &irregular, p);
+        assert!(v_reg.gflops > s_reg.gflops, "vendor should win on regular");
+        assert!(v_irr.gflops < s_irr.gflops, "vendor should lose on irregular");
+    }
+
+    /// Fig. 10: relative bandwidth lands in each device's published band
+    /// for a well-behaved large matrix.
+    #[test]
+    fn relative_bandwidth_bands() {
+        let s = stats(2_000_000, 16_000_000, 10, 0.15, 0.002);
+        for dev in Device::ALL {
+            let p = if dev == Device::Gen12 {
+                Precision::Single
+            } else {
+                Precision::Double
+            };
+            let proj = project_spmv(dev, Implementation::Sparkle, SpmvKernelKind::Csr, &s, p);
+            let (lo, hi) = dev.spec().relative_bw_band;
+            assert!(
+                proj.relative_bw > lo * 0.85 && proj.relative_bw < hi * 1.15,
+                "{}: relative bw {:.2} outside [{:.2}, {:.2}]",
+                dev.spec().name,
+                proj.relative_bw,
+                lo,
+                hi
+            );
+        }
+    }
+
+    /// Fig. 9 shape: short-recurrence solvers cluster, GMRES lags.
+    #[test]
+    fn solver_projection_gmres_lags() {
+        let n = 1_000_000usize;
+        let nnz = 10 * n;
+        let elem = 8usize;
+        // per-iter numbers in the style of the Solver trait impls
+        let cg_flops = 2 * nnz as u64 + 12 * n as u64;
+        let cg_bytes = (nnz * (elem + 8) + 2 * n * elem + 13 * n * elem) as u64;
+        let (cg_gf, _) =
+            project_solver(Device::Gen9, cg_flops, cg_bytes, 10, 0.0, Precision::Double, 1000);
+        let gmres_flops = 2 * nnz as u64 + 16 * 4 * n as u64;
+        let gmres_bytes = (nnz * (elem + 8) + 2 * n * elem + 16 * 5 * n * elem) as u64;
+        let (gm_gf, _) = project_solver(
+            Device::Gen9,
+            gmres_flops,
+            gmres_bytes,
+            40,
+            50.0,
+            Precision::Double,
+            1000,
+        );
+        // paper §6.4: solvers land in 1.5-2.5 GFLOP/s on GEN9, GMRES lower
+        assert!((1.2..3.0).contains(&cg_gf), "cg {cg_gf}");
+        assert!(gm_gf < cg_gf, "gmres {gm_gf} vs cg {cg_gf}");
+    }
+}

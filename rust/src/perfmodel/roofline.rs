@@ -1,0 +1,98 @@
+//! Roofline evaluation: bandwidth saturation + arithmetic ceilings.
+
+use crate::core::types::Precision;
+use crate::perfmodel::device::DeviceSpec;
+
+/// Roofline calculator for one device.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    spec: DeviceSpec,
+}
+
+impl Roofline {
+    /// Build from a device spec.
+    pub fn new(spec: DeviceSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Underlying spec.
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Achievable bandwidth (GB/s) for a streaming kernel moving
+    /// `bytes` in total (Fig. 6 saturation shape: small arrays cannot
+    /// fill the memory pipeline).
+    pub fn bandwidth_at(&self, bytes: f64) -> f64 {
+        self.spec.bw_measured * bytes / (bytes + self.spec.n_half_bytes)
+    }
+
+    /// Same, for kernels with a global synchronization (DOT in Fig. 6).
+    pub fn sync_bandwidth_at(&self, bytes: f64) -> f64 {
+        self.bandwidth_at(bytes) * self.spec.sync_penalty
+    }
+
+    /// Attainable GFLOP/s at arithmetic intensity `ai` (flop/byte) and
+    /// precision `p` — the classical roofline (Fig. 7).
+    pub fn attainable_gflops(&self, ai: f64, p: Precision) -> f64 {
+        (ai * self.spec.bw_measured).min(self.spec.peak_at(p))
+    }
+
+    /// Arithmetic intensity at which the roofline ridges from bandwidth-
+    /// to compute-bound.
+    pub fn ridge_point(&self, p: Precision) -> f64 {
+        self.spec.peak_at(p) / self.spec.bw_measured
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::device::Device;
+
+    #[test]
+    fn saturation_monotone_and_bounded() {
+        let r = Roofline::new(Device::Gen12.spec());
+        let small = r.bandwidth_at(4.0 * 1024.0);
+        let medium = r.bandwidth_at(1024.0 * 1024.0);
+        let large = r.bandwidth_at(512.0 * 1024.0 * 1024.0);
+        assert!(small < medium && medium < large);
+        assert!(large <= r.spec().bw_measured);
+        assert!(large > 0.98 * r.spec().bw_measured);
+    }
+
+    #[test]
+    fn dot_penalty_applies() {
+        let r = Roofline::new(Device::Gen9.spec());
+        let b = 64.0 * 1024.0 * 1024.0;
+        assert!(r.sync_bandwidth_at(b) < r.bandwidth_at(b));
+    }
+
+    #[test]
+    fn roofline_ceilings_match_paper() {
+        // §6.3: GEN9 double CSR SpMV bound = AI 1/6 * 37 GB/s ≈ 6 GFLOP/s
+        let r = Roofline::new(Device::Gen9.spec());
+        let bound = r.attainable_gflops(1.0 / 6.0, Precision::Double);
+        assert!((bound - 6.16).abs() < 0.1, "bound {bound}");
+        // COO: AI 1/8 -> 4.6
+        let coo = r.attainable_gflops(1.0 / 8.0, Precision::Double);
+        assert!((coo - 4.6).abs() < 0.1, "coo {coo}");
+        // GEN12 single CSR: AI 1/4 * 58 = 14.5 ; COO 1/6 -> 9.7 (§6.3)
+        let r12 = Roofline::new(Device::Gen12.spec());
+        let csr12 = r12.attainable_gflops(0.25, Precision::Single);
+        assert!((csr12 - 14.5).abs() < 0.1, "csr12 {csr12}");
+        let coo12 = r12.attainable_gflops(1.0 / 6.0, Precision::Single);
+        assert!((coo12 - 9.67).abs() < 0.1, "coo12 {coo12}");
+    }
+
+    #[test]
+    fn compute_bound_kernels_hit_peak() {
+        let r = Roofline::new(Device::Gen12.spec());
+        assert_eq!(
+            r.attainable_gflops(1e6, Precision::Single),
+            r.spec().peak_at(Precision::Single)
+        );
+        // GEN12 double emulation ridge is almost at zero intensity
+        assert!(r.ridge_point(Precision::Double) < 0.2);
+    }
+}

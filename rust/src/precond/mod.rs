@@ -1,0 +1,5 @@
+//! Preconditioners (Ginkgo's `preconditioner` namespace).
+
+mod jacobi;
+
+pub use jacobi::{BlockJacobi, Jacobi};

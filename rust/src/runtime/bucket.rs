@@ -1,0 +1,57 @@
+//! Shape buckets for AOT artifacts.
+//!
+//! XLA executables have static shapes, so `aot.py` lowers every kernel at
+//! a small set of power-of-4 sizes and the runtime pads inputs up to the
+//! next bucket. Padding is arithmetic-neutral by construction (zero
+//! values, index 0 columns/rows); tests in `kernels::xla` verify this.
+
+/// Vector-length buckets lowered by `aot.py` (powers of 4 from 2^8 to 2^20).
+pub const N_BUCKETS: &[usize] = &[256, 1024, 4096, 16384, 65536, 262144, 1048576];
+
+/// ELL padded-width buckets.
+pub const K_BUCKETS: &[usize] = &[8, 32, 128];
+
+/// COO nnz buckets are multiples of the row bucket: `nnz = m * n`.
+pub const NNZ_MULTIPLIERS: &[usize] = &[4, 16, 64];
+
+/// Smallest bucket `>= need`, or `None` if `need` exceeds the largest.
+pub fn fit(buckets: &[usize], need: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= need)
+}
+
+/// Pad a slice with `pad` up to `len`.
+pub fn pad_to<T: Copy>(data: &[T], len: usize, pad: T) -> Vec<T> {
+    debug_assert!(data.len() <= len);
+    let mut v = Vec::with_capacity(len);
+    v.extend_from_slice(data);
+    v.resize(len, pad);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_selects_next_bucket() {
+        assert_eq!(fit(N_BUCKETS, 1), Some(256));
+        assert_eq!(fit(N_BUCKETS, 256), Some(256));
+        assert_eq!(fit(N_BUCKETS, 257), Some(1024));
+        assert_eq!(fit(N_BUCKETS, 1 << 20), Some(1 << 20));
+        assert_eq!(fit(N_BUCKETS, (1 << 20) + 1), None);
+    }
+
+    #[test]
+    fn buckets_sorted_ascending() {
+        assert!(N_BUCKETS.windows(2).all(|w| w[0] < w[1]));
+        assert!(K_BUCKETS.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn pad_to_extends_with_value() {
+        assert_eq!(pad_to(&[1, 2], 4, 0), vec![1, 2, 0, 0]);
+        assert_eq!(pad_to(&[1.5f64], 1, 9.0), vec![1.5]);
+        let empty: &[i32] = &[];
+        assert_eq!(pad_to(empty, 3, 7), vec![7, 7, 7]);
+    }
+}

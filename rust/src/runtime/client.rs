@@ -1,0 +1,170 @@
+//! PJRT client wrapper with a compile cache and manifest-driven artifact
+//! selection. This is the load-and-execute half of the AOT bridge
+//! (`python/compile/aot.py` is the author half).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::types::{Precision, Value};
+use crate::runtime::exec::Arg;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Owns the PJRT CPU client, the artifact manifest, and a cache of
+/// compiled executables keyed by artifact name. Compilation is lazy.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative number of kernel launches (for perf accounting).
+    launches: std::sync::atomic::AtomicU64,
+}
+
+impl XlaRuntime {
+    /// Create a runtime reading artifacts from `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| SparkleError::Runtime(format!("PJRT cpu client: {e:?}")))?;
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifact_dir)?;
+        Ok(Self {
+            client,
+            artifact_dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            launches: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest artifact of `kernel` at `dtype` covering the given sizes.
+    pub fn select(
+        &self,
+        kernel: &str,
+        dtype: Precision,
+        need_n: usize,
+        need_k: usize,
+        need_nnz: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.manifest.select(kernel, dtype, need_n, need_k, need_nnz)
+    }
+
+    /// Number of kernel launches so far.
+    pub fn launch_count(&self) -> u64 {
+        self.launches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Move host data into a device-resident PJRT buffer. Matrix operands
+    /// cached this way skip per-call literal marshalling entirely
+    /// (EXPERIMENTS.md §Perf, L3 iteration 4).
+    pub fn to_device<E: xla::ArrayElement>(
+        &self,
+        data: &[E],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| SparkleError::Runtime(format!("to_device: {e:?}")))
+    }
+
+    /// Execute an artifact on device-resident buffers (`execute_b`),
+    /// returning all outputs at precision `T`.
+    pub fn run_buffers<T: Value>(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<T>>> {
+        let exe = self.executable(name)?;
+        self.launches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| SparkleError::Runtime(format!("execute_b {name}: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| SparkleError::Runtime(format!("fetch result: {e:?}")))?;
+        let parts = result
+            .decompose_tuple()
+            .map_err(|e| SparkleError::Runtime(format!("decompose tuple: {e:?}")))?;
+        parts
+            .iter()
+            .map(|l| {
+                T::literal_to_vec(l)
+                    .map_err(|e| SparkleError::Runtime(format!("read output: {e:?}")))
+            })
+            .collect()
+    }
+
+    /// Load + compile `<artifact_dir>/<name>.hlo.txt` (cached).
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| SparkleError::Runtime("artifact path not utf-8".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| SparkleError::Runtime(format!("load HLO text {path:?}: {e:?}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| SparkleError::Runtime(format!("compile {name}: {e:?}")))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact. All value inputs/outputs share precision `T`;
+    /// index inputs are i32. Artifacts are lowered with
+    /// `return_tuple=True`, so the single result is a tuple we decompose.
+    pub fn run<T: Value>(&self, name: &str, args: &[Arg<'_, T>]) -> Result<Vec<Vec<T>>> {
+        let exe = self.executable(name)?;
+        let literals = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.launches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| SparkleError::Runtime(format!("execute {name}: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| SparkleError::Runtime(format!("fetch result: {e:?}")))?;
+        let parts = result
+            .decompose_tuple()
+            .map_err(|e| SparkleError::Runtime(format!("decompose tuple: {e:?}")))?;
+        parts
+            .iter()
+            .map(|l| {
+                T::literal_to_vec(l)
+                    .map_err(|e| SparkleError::Runtime(format!("read output: {e:?}")))
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "XlaRuntime(dir={:?}, artifacts={})",
+            self.artifact_dir,
+            self.manifest.len()
+        )
+    }
+}

@@ -1,0 +1,94 @@
+//! Typed execution helpers: marshal Rust slices into XLA literals and back.
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::types::Value;
+
+/// One kernel argument.
+pub enum Arg<'a, T> {
+    /// Scalar value (rank-0 literal).
+    Scalar(T),
+    /// Value array with explicit dims.
+    Values(&'a [T], Vec<i64>),
+    /// Index array (i32) with explicit dims.
+    Indices(&'a [i32], Vec<i64>),
+}
+
+impl<'a, T: Value> Arg<'a, T> {
+    /// 1-D value array.
+    pub fn vec(data: &'a [T]) -> Self {
+        Arg::Values(data, vec![data.len() as i64])
+    }
+
+    /// 2-D value array (row-major).
+    pub fn mat(data: &'a [T], rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(data.len(), rows * cols);
+        Arg::Values(data, vec![rows as i64, cols as i64])
+    }
+
+    /// 1-D index array.
+    pub fn idx(data: &'a [i32]) -> Self {
+        Arg::Indices(data, vec![data.len() as i64])
+    }
+
+    /// 2-D index array (row-major).
+    pub fn idx_mat(data: &'a [i32], rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(data.len(), rows * cols);
+        Arg::Indices(data, vec![rows as i64, cols as i64])
+    }
+
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let reshape = |lit: xla::Literal, dims: &[i64]| -> Result<xla::Literal> {
+            // vec1 gives rank-1; keep as-is when dims already match
+            if dims.len() == 1 {
+                Ok(lit)
+            } else {
+                lit.reshape(dims)
+                    .map_err(|e| SparkleError::Runtime(format!("reshape arg: {e:?}")))
+            }
+        };
+        match self {
+            Arg::Scalar(v) => {
+                let lit = T::literal_vec(&[*v]);
+                lit.reshape(&[])
+                    .map_err(|e| SparkleError::Runtime(format!("scalar reshape: {e:?}")))
+            }
+            Arg::Values(data, dims) => reshape(T::literal_vec(data), dims),
+            Arg::Indices(data, dims) => reshape(xla::Literal::vec1(data), dims),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_constructors_shape() {
+        let v = [1.0f32, 2.0, 3.0, 4.0];
+        match Arg::vec(&v) {
+            Arg::Values(d, dims) => {
+                assert_eq!(d.len(), 4);
+                assert_eq!(dims, vec![4]);
+            }
+            _ => panic!(),
+        }
+        match Arg::mat(&v, 2, 2) {
+            Arg::Values(_, dims) => assert_eq!(dims, vec![2, 2]),
+            _ => panic!(),
+        }
+        let i = [1i32, 2];
+        match Arg::<f32>::idx(&i) {
+            Arg::Indices(_, dims) => assert_eq!(dims, vec![2]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn literals_build() {
+        let v = [1.0f64, 2.0];
+        assert!(Arg::vec(&v).to_literal().is_ok());
+        assert!(Arg::Scalar(3.5f64).to_literal().is_ok());
+        let i = [0i32, 1, 2, 3];
+        assert!(Arg::<f64>::idx_mat(&i, 2, 2).to_literal().is_ok());
+    }
+}

@@ -1,0 +1,215 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! The manifest is a TSV file (`artifacts/manifest.tsv`) with one line per
+//! artifact: `name  kernel  dtype  n  k  nnz` (unused params are 0).
+//! TSV instead of JSON because the offline vendor set has no serde; the
+//! format is trivially stable.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::types::Precision;
+
+/// Metadata of one AOT-compiled artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// File stem: `artifacts/<name>.hlo.txt`.
+    pub name: String,
+    /// Kernel family (`axpy`, `ell`, `coo`, `cg_step`, ...).
+    pub kernel: String,
+    /// Value precision the artifact was lowered at.
+    pub dtype: Precision,
+    /// Padded vector length (rows), 0 if not applicable.
+    pub n: usize,
+    /// Padded ELL width, 0 if not applicable.
+    pub k: usize,
+    /// Padded nnz (COO), 0 if not applicable.
+    pub nnz: usize,
+}
+
+/// Parsed manifest with an index by (kernel, dtype).
+#[derive(Debug, Default)]
+pub struct Manifest {
+    by_kernel: HashMap<(String, Precision), Vec<ArtifactMeta>>,
+    count: usize,
+}
+
+fn parse_dtype(s: &str) -> Result<Precision> {
+    match s {
+        "f64" => Ok(Precision::Double),
+        "f32" => Ok(Precision::Single),
+        "f16" => Ok(Precision::Half),
+        other => Err(SparkleError::Parse(format!("unknown dtype `{other}`"))),
+    }
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`. A missing manifest yields an empty
+    /// registry (the runtime then reports artifacts as unavailable).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        if !path.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Self::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 6 {
+                return Err(SparkleError::Parse(format!(
+                    "manifest line {}: expected 6 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                )));
+            }
+            let parse_usize = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    SparkleError::Parse(format!(
+                        "manifest line {}: bad {what} `{s}`",
+                        lineno + 1
+                    ))
+                })
+            };
+            let meta = ArtifactMeta {
+                name: fields[0].to_string(),
+                kernel: fields[1].to_string(),
+                dtype: parse_dtype(fields[2])?,
+                n: parse_usize(fields[3], "n")?,
+                k: parse_usize(fields[4], "k")?,
+                nnz: parse_usize(fields[5], "nnz")?,
+            };
+            m.by_kernel
+                .entry((meta.kernel.clone(), meta.dtype))
+                .or_default()
+                .push(meta);
+            m.count += 1;
+        }
+        // sort each family by (n, k, nnz) so selection picks the smallest fit
+        for v in m.by_kernel.values_mut() {
+            v.sort_by_key(|a| (a.n, a.k, a.nnz));
+        }
+        Ok(m)
+    }
+
+    /// Total number of artifacts.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True if no artifacts are registered.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// All artifacts of a kernel family at a precision, sorted ascending.
+    pub fn family(&self, kernel: &str, dtype: Precision) -> &[ArtifactMeta] {
+        self.by_kernel
+            .get(&(kernel.to_string(), dtype))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Smallest artifact with `n >= need_n`, `k >= need_k`, `nnz >= need_nnz`.
+    pub fn select(
+        &self,
+        kernel: &str,
+        dtype: Precision,
+        need_n: usize,
+        need_k: usize,
+        need_nnz: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.family(kernel, dtype)
+            .iter()
+            .find(|a| a.n >= need_n && a.k >= need_k && a.nnz >= need_nnz)
+            .ok_or_else(|| {
+                SparkleError::Runtime(format!(
+                    "no `{kernel}` artifact at {dtype} covering n={need_n} k={need_k} nnz={need_nnz} \
+                     (have {} candidates; run `make artifacts`?)",
+                    self.family(kernel, dtype).len()
+                ))
+            })
+    }
+
+    /// Largest nnz bucket of a COO-style family at a given n (for chunked
+    /// dispatch when nnz exceeds every bucket).
+    pub fn max_nnz_at(&self, kernel: &str, dtype: Precision, need_n: usize) -> Option<&ArtifactMeta> {
+        self.family(kernel, dtype)
+            .iter()
+            .filter(|a| a.n >= need_n)
+            .max_by_key(|a| a.nnz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+axpy_f32_1024\taxpy\tf32\t1024\t0\t0
+axpy_f32_4096\taxpy\tf32\t4096\t0\t0
+ell_f64_1024_8\tell\tf64\t1024\t8\t0
+ell_f64_1024_32\tell\tf64\t1024\t32\t0
+coo_f32_1024_4096\tcoo\tf32\t1024\t0\t4096
+coo_f32_1024_16384\tcoo\tf32\t1024\t0\t16384
+";
+
+    #[test]
+    fn parse_counts_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.family("axpy", Precision::Single).len(), 2);
+        assert_eq!(m.family("axpy", Precision::Double).len(), 0);
+        assert_eq!(m.family("nope", Precision::Single).len(), 0);
+    }
+
+    #[test]
+    fn select_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.select("axpy", Precision::Single, 900, 0, 0).unwrap();
+        assert_eq!(a.name, "axpy_f32_1024");
+        let a = m.select("axpy", Precision::Single, 1025, 0, 0).unwrap();
+        assert_eq!(a.name, "axpy_f32_4096");
+        assert!(m.select("axpy", Precision::Single, 5000, 0, 0).is_err());
+    }
+
+    #[test]
+    fn select_multi_param() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.select("ell", Precision::Double, 1000, 9, 0).unwrap();
+        assert_eq!(a.k, 32);
+        let a = m.select("coo", Precision::Single, 1024, 0, 5000).unwrap();
+        assert_eq!(a.nnz, 16384);
+    }
+
+    #[test]
+    fn max_nnz_at_picks_largest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.max_nnz_at("coo", Precision::Single, 1024).unwrap();
+        assert_eq!(a.nnz, 16384);
+        assert!(m.max_nnz_at("coo", Precision::Single, 4096).is_none());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("too\tfew\tfields").is_err());
+        assert!(Manifest::parse("x\tk\tbad_dtype\t1\t0\t0").is_err());
+        assert!(Manifest::parse("x\tk\tf32\tNaN\t0\t0").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = Manifest::parse("").unwrap();
+        assert!(m.is_empty());
+    }
+}

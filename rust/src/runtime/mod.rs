@@ -1,0 +1,15 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly.
+
+pub mod bucket;
+mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use client::XlaRuntime;
+pub use exec::Arg;
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,159 @@
+//! BiCGSTAB [van der Vorst 1992] — short-recurrence solver for general
+//! (nonsymmetric) systems; two SpMVs per iteration.
+
+use crate::core::error::Result;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::blas;
+use crate::matrix::dense::Dense;
+use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::stop::StopStatus;
+
+/// BiCGSTAB solver.
+pub struct BiCgStab {
+    config: SolverConfig,
+}
+
+impl BiCgStab {
+    /// New solver with the given config.
+    pub fn new(config: SolverConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl<T: Value> Solver<T> for BiCgStab {
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        a.check_conformant(b, x)?;
+        let exec = x.executor().clone();
+        let dim = x.shape();
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+
+        let mut r = b.clone();
+        a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+        let rhat = r.clone();
+        let mut p = Dense::zeros(exec.clone(), dim);
+        let mut v = Dense::zeros(exec.clone(), dim);
+        let mut s = Dense::zeros(exec.clone(), dim);
+        let mut t = Dense::zeros(exec.clone(), dim);
+        let mut rho = T::one();
+        let mut alpha = T::one();
+        let mut omega = T::one();
+
+        let bnorm = blas::norm2(&exec, b)?.as_f64();
+        let mut resnorm = blas::norm2(&exec, &r)?.as_f64();
+        let mut history = Vec::new();
+        if self.config.record_history {
+            history.push(resnorm);
+        }
+
+        let mut iters = 0;
+        loop {
+            match crit.check(iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    return Ok(SolveResult {
+                        iterations: iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    })
+                }
+            }
+            let rho_new = blas::dot(&exec, &rhat, &r)?;
+            let beta = (rho_new / rho) * (alpha / omega);
+            rho = rho_new;
+            // p = r + beta * (p - omega * v)
+            blas::axpy(&exec, -omega, &v, &mut p)?;
+            blas::axpby(&exec, T::one(), &r, beta, &mut p)?;
+            a.apply(&p, &mut v)?;
+            alpha = rho / blas::dot(&exec, &rhat, &v)?;
+            // s = r - alpha v
+            s.copy_from(&r)?;
+            blas::axpy(&exec, -alpha, &v, &mut s)?;
+            a.apply(&s, &mut t)?;
+            let tt = blas::dot(&exec, &t, &t)?;
+            omega = if tt.is_zero() {
+                T::zero()
+            } else {
+                blas::dot(&exec, &t, &s)? / tt
+            };
+            // x += alpha p + omega s
+            blas::axpy(&exec, alpha, &p, x)?;
+            blas::axpy(&exec, omega, &s, x)?;
+            // r = s - omega t
+            r.copy_from(&s)?;
+            blas::axpy(&exec, -omega, &t, &mut r)?;
+            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            iters += 1;
+            if self.config.record_history {
+                history.push(resnorm);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bicgstab"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        // 2 SpMV + 5 dot-like + 6 axpy-like
+        4 * nnz as u64 + (5 * 2 + 6 * 2) * n as u64
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        (2 * (nnz * (elem + 8) + 2 * n * elem) + 6 * 3 * n * elem + 5 * 2 * n * elem) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    #[test]
+    fn converges_on_nonsymmetric_system() {
+        let mut rng = Prng::new(21);
+        let n = 250;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 4); // nonsym, diag-dominant
+        let bv = gen_vec::<f64>(&mut rng, n);
+        for exec in [Executor::reference(), Executor::par_with_threads(4)] {
+            let a = Csr::from_data(exec.clone(), &data).unwrap();
+            let b = Dense::vector(exec.clone(), &bv);
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let solver =
+                BiCgStab::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 500)));
+            let result = solver.solve(&a, &b, &mut x).unwrap();
+            assert!(result.converged, "{}: {result:?}", exec.name());
+            let mut r = b.clone();
+            a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+            assert!(r.norm2_host() < 1e-7 * b.norm2_host());
+        }
+    }
+
+    #[test]
+    fn works_single_precision() {
+        let mut rng = Prng::new(23);
+        let n = 120;
+        let data = gen_sparse::<f32>(&mut rng, n, n, 3);
+        let bv = gen_vec::<f32>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let solver =
+            BiCgStab::new(SolverConfig::with_criterion(Criterion::residual(1e-5, 300)));
+        let result = solver.solve(&a, &b, &mut x).unwrap();
+        assert!(result.converged, "{result:?}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Conjugate Gradient (optionally preconditioned).
+//!
+//! Textbook PCG [Saad 2003, alg. 9.1]; short recurrence, for SPD
+//! operators. The workhorse of the paper's solver study.
+
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::blas;
+use crate::matrix::dense::Dense;
+use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::stop::StopStatus;
+
+/// CG solver with optional preconditioner.
+pub struct Cg<T: Value> {
+    config: SolverConfig,
+    precond: Option<Arc<dyn LinOp<T>>>,
+}
+
+impl<T: Value> Cg<T> {
+    /// Unpreconditioned CG.
+    pub fn new(config: SolverConfig) -> Self {
+        Self {
+            config,
+            precond: None,
+        }
+    }
+
+    /// Attach a preconditioner `M ≈ A⁻¹` applied as `z = M r`.
+    pub fn with_preconditioner(mut self, m: Arc<dyn LinOp<T>>) -> Self {
+        self.precond = Some(m);
+        self
+    }
+}
+
+impl<T: Value> Solver<T> for Cg<T> {
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        a.check_conformant(b, x)?;
+        let exec = x.executor().clone();
+        let dim = x.shape();
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+
+        // r = b - A x
+        let mut r = b.clone();
+        a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+        let mut z = Dense::zeros(exec.clone(), dim);
+        match &self.precond {
+            Some(m) => m.apply(&r, &mut z)?,
+            None => z.copy_from(&r)?,
+        }
+        let mut p = z.clone();
+        let mut q = Dense::zeros(exec.clone(), dim);
+        let mut rz = blas::dot(&exec, &r, &z)?;
+
+        let bnorm = blas::norm2(&exec, b)?.as_f64();
+        let mut resnorm = blas::norm2(&exec, &r)?.as_f64();
+        let mut history = Vec::new();
+        if self.config.record_history {
+            history.push(resnorm);
+        }
+
+        let mut iters = 0;
+        loop {
+            match crit.check(iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    return Ok(SolveResult {
+                        iterations: iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    })
+                }
+            }
+            a.apply(&p, &mut q)?;
+            let pq = blas::dot(&exec, &p, &q)?;
+            let alpha = rz / pq;
+            blas::axpy(&exec, alpha, &p, x)?;
+            blas::axpy(&exec, -alpha, &q, &mut r)?;
+            match &self.precond {
+                Some(m) => m.apply(&r, &mut z)?,
+                None => z.copy_from(&r)?,
+            }
+            let rz_new = blas::dot(&exec, &r, &z)?;
+            let beta = rz_new / rz;
+            rz = rz_new;
+            // p = z + beta p
+            blas::axpby(&exec, T::one(), &z, beta, &mut p)?;
+            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            iters += 1;
+            if self.config.record_history {
+                history.push(resnorm);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        // 1 SpMV + 3 dot-like (pq, rz, ||r||) + 3 axpy-like
+        2 * nnz as u64 + (3 * 2 + 3 * 2) * n as u64
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        // COO SpMV footprint + BLAS-1 traffic (3 axpy: r3n, 3 dot: r2n)
+        ((nnz * (elem + 8) + 2 * n * elem) + 3 * 3 * n * elem + 3 * 2 * n * elem) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    fn spd_system(seed: u64, n: usize) -> (crate::MatrixData<f64>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut data = gen_sparse::<f64>(&mut rng, n, n, 3);
+        data.symmetrize();
+        data.shift_diagonal(1.0);
+        let b = gen_vec::<f64>(&mut rng, n);
+        (data, b)
+    }
+
+    #[test]
+    fn converges_on_spd_system() {
+        let (data, bv) = spd_system(11, 200);
+        for exec in [Executor::reference(), Executor::par_with_threads(4)] {
+            let a = Csr::from_data(exec.clone(), &data).unwrap();
+            let b = Dense::vector(exec.clone(), &bv);
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(200, 1));
+            let solver = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 500)));
+            let result = solver.solve(&a, &b, &mut x).unwrap();
+            assert!(result.converged, "{}: {result:?}", exec.name());
+            // true residual check
+            let mut r = b.clone();
+            a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+            assert!(r.norm2_host() < 1e-8 * b.norm2_host());
+        }
+    }
+
+    #[test]
+    fn jacobi_preconditioner_reduces_iterations() {
+        // badly scaled diagonal makes plain CG slow; Jacobi fixes scaling
+        let n = 150;
+        let mut rng = Prng::new(3);
+        let mut data = crate::MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            let scale = 10f64.powi((rng.below(5) as i32) - 2);
+            data.push(i as i32, i as i32, 4.0 * scale);
+            if i + 1 < n {
+                data.push(i as i32, (i + 1) as i32, -1.0 * scale);
+                data.push((i + 1) as i32, i as i32, -1.0 * scale);
+            }
+        }
+        data.normalize();
+        // symmetrize the scaling: D A D is SPD; here keep A nonsym-scaled
+        // but SPD-enough by averaging
+        data.symmetrize();
+        data.shift_diagonal(0.5);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let b = Dense::vector(exec.clone(), &bv);
+        let crit = Criterion::residual(1e-8, 2000);
+
+        let mut x0 = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let plain = Cg::new(SolverConfig::with_criterion(crit.clone()))
+            .solve(&a, &b, &mut x0)
+            .unwrap();
+
+        let jacobi = crate::precond::Jacobi::from_csr(&a).unwrap();
+        let mut x1 = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let pcg = Cg::new(SolverConfig::with_criterion(crit))
+            .with_preconditioner(std::sync::Arc::new(jacobi));
+        let precond = pcg.solve(&a, &b, &mut x1).unwrap();
+
+        assert!(precond.converged);
+        assert!(
+            precond.iterations < plain.iterations,
+            "jacobi {} vs plain {}",
+            precond.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn iteration_budget_reported() {
+        let (data, bv) = spd_system(13, 100);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(100, 1));
+        let solver = Cg::new(SolverConfig::with_criterion(Criterion::iterations(7)));
+        let r = solver.solve(&a, &b, &mut x).unwrap();
+        assert_eq!(r.iterations, 7);
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn history_recorded_and_decreasing() {
+        let (data, bv) = spd_system(17, 120);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(120, 1));
+        let mut cfg = SolverConfig::with_criterion(Criterion::residual(1e-10, 300));
+        cfg.record_history = true;
+        let r = Cg::new(cfg).solve(&a, &b, &mut x).unwrap();
+        assert_eq!(r.history.len(), r.iterations + 1);
+        assert!(r.history.last().unwrap() < &r.history[0]);
+    }
+}

@@ -1,0 +1,139 @@
+//! CGS (Conjugate Gradient Squared) [Sonneveld 1989] — short-recurrence
+//! transpose-free solver for general systems; two SpMVs per iteration.
+
+use crate::core::error::Result;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::blas;
+use crate::matrix::dense::Dense;
+use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::stop::StopStatus;
+
+/// CGS solver.
+pub struct Cgs {
+    config: SolverConfig,
+}
+
+impl Cgs {
+    /// New solver with the given config.
+    pub fn new(config: SolverConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl<T: Value> Solver<T> for Cgs {
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        a.check_conformant(b, x)?;
+        let exec = x.executor().clone();
+        let dim = x.shape();
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+
+        let mut r = b.clone();
+        a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+        let rhat = r.clone();
+        let mut p = Dense::zeros(exec.clone(), dim);
+        let mut q = Dense::zeros(exec.clone(), dim);
+        let mut u = Dense::zeros(exec.clone(), dim);
+        let mut vhat = Dense::zeros(exec.clone(), dim);
+        let mut uq = Dense::zeros(exec.clone(), dim);
+        let mut auq = Dense::zeros(exec.clone(), dim);
+        let mut rho = T::one();
+
+        let bnorm = blas::norm2(&exec, b)?.as_f64();
+        let mut resnorm = blas::norm2(&exec, &r)?.as_f64();
+        let mut history = Vec::new();
+        if self.config.record_history {
+            history.push(resnorm);
+        }
+
+        let mut iters = 0;
+        loop {
+            match crit.check(iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    return Ok(SolveResult {
+                        iterations: iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    })
+                }
+            }
+            let rho_new = blas::dot(&exec, &rhat, &r)?;
+            let beta = rho_new / rho;
+            rho = rho_new;
+            // u = r + beta q
+            u.copy_from(&r)?;
+            blas::axpy(&exec, beta, &q, &mut u)?;
+            // p = u + beta (q + beta p)
+            blas::axpby(&exec, T::one(), &q, beta, &mut p)?;
+            blas::axpby(&exec, T::one(), &u, beta, &mut p)?;
+            a.apply(&p, &mut vhat)?;
+            let sigma = blas::dot(&exec, &rhat, &vhat)?;
+            let alpha = rho / sigma;
+            // q = u - alpha vhat
+            q.copy_from(&u)?;
+            blas::axpy(&exec, -alpha, &vhat, &mut q)?;
+            // uq = u + q
+            uq.copy_from(&u)?;
+            blas::axpy(&exec, T::one(), &q, &mut uq)?;
+            // x += alpha uq ; r -= alpha A uq
+            blas::axpy(&exec, alpha, &uq, x)?;
+            a.apply(&uq, &mut auq)?;
+            blas::axpy(&exec, -alpha, &auq, &mut r)?;
+            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            iters += 1;
+            if self.config.record_history {
+                history.push(resnorm);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cgs"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        // 2 SpMV + 3 dot-like + 7 axpy-like
+        4 * nnz as u64 + (3 * 2 + 7 * 2) * n as u64
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        (2 * (nnz * (elem + 8) + 2 * n * elem) + 7 * 3 * n * elem + 3 * 2 * n * elem) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    #[test]
+    fn converges_on_nonsymmetric_system() {
+        let mut rng = Prng::new(31);
+        let n = 220;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let solver = Cgs::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 500)));
+        let result = solver.solve(&a, &b, &mut x).unwrap();
+        assert!(result.converged, "{result:?}");
+        let mut r = b.clone();
+        a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+        assert!(r.norm2_host() < 1e-7 * b.norm2_host());
+    }
+}

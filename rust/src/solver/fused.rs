@@ -1,0 +1,178 @@
+//! Fused-iteration solver drivers for the XLA executor.
+//!
+//! Where the composed drivers in this module's siblings issue ~10 PJRT
+//! dispatches per iteration (one per BLAS-1/SpMV call), these drivers run
+//! one `*_step` artifact per iteration: the whole iteration body was
+//! fused at L2 (`python/compile/model.py`) and lowered AOT. This is the
+//! L2 optimization the perf pass measures (`ablation_fused_step` bench):
+//! dispatch overhead amortizes from ~10 crossings to 1 per iteration.
+//!
+//! The matrix must fit one ELL bucket (no width-chunking inside a fused
+//! step); `FusedCg::supported` reports whether the fused path applies.
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+use crate::matrix::ell::Ell;
+use crate::runtime::bucket::pad_to;
+use crate::runtime::XlaRuntime;
+use crate::solver::{SolveResult, SolverConfig};
+use crate::stop::StopStatus;
+
+/// CG driver running one fused `cg_step` artifact per iteration.
+pub struct FusedCg {
+    config: SolverConfig,
+}
+
+impl FusedCg {
+    /// New fused CG with the given config.
+    pub fn new(config: SolverConfig) -> Self {
+        Self { config }
+    }
+
+    /// Whether the fused path covers this operator on this runtime.
+    pub fn supported<T: Value>(rt: &XlaRuntime, a: &Ell<T>) -> bool {
+        rt.select(
+            "cg_step",
+            T::PRECISION,
+            a.shape().rows.max(a.shape().cols),
+            a.stored_per_row().max(1),
+            0,
+        )
+        .is_ok()
+    }
+
+    /// Solve `A x = b` on the XLA executor.
+    pub fn solve<T: Value>(
+        &self,
+        a: &Ell<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        let exec = a.executor().clone();
+        let rt = exec.xla_runtime().ok_or(SparkleError::NotSupported {
+            op: "fused cg",
+            exec: "non-xla",
+        })?;
+        let n = a.shape().rows;
+        let k = a.stored_per_row().max(1);
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+        let meta = rt.select("cg_step", T::PRECISION, n.max(a.shape().cols), k, 0)?;
+        let (bn, bk) = (meta.n, meta.k);
+        let name = meta.name.clone();
+
+        // pad ELL storage into the bucket once and push it to the device
+        // once (§Perf L3 iteration 4: matrix operands are loop-invariant)
+        let mut vals = vec![T::zero(); bk * bn];
+        let mut cols = vec![0i32; bk * bn];
+        for j in 0..k {
+            vals[j * bn..j * bn + n].copy_from_slice(&a.values()[j * n..(j + 1) * n]);
+            cols[j * bn..j * bn + n].copy_from_slice(&a.col_idxs()[j * n..(j + 1) * n]);
+        }
+        let vals_b = rt.to_device(&vals, &[bk, bn])?;
+        let cols_b = rt.to_device(&cols, &[bk, bn])?;
+
+        // r = b - A x (host-side init via the composed path)
+        let mut r = b.clone();
+        a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+        let mut xv = pad_to(x.as_slice(), bn, T::zero());
+        let mut rv = pad_to(r.as_slice(), bn, T::zero());
+        let mut pv = rv.clone();
+        let mut rr = crate::kernels::reference::dot(&rv, &rv);
+
+        let bnorm = b.norm2_host();
+        let mut resnorm = rr.as_f64().sqrt();
+        let mut history = Vec::new();
+        if self.config.record_history {
+            history.push(resnorm);
+        }
+
+        let mut iters = 0;
+        loop {
+            match crit.check(iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    x.as_mut_slice().copy_from_slice(&xv[..n]);
+                    return Ok(SolveResult {
+                        iterations: iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    });
+                }
+            }
+            let x_b = rt.to_device(&xv, &[bn])?;
+            let r_b = rt.to_device(&rv, &[bn])?;
+            let p_b = rt.to_device(&pv, &[bn])?;
+            let rr_b = rt.to_device(&[rr], &[])?;
+            let out =
+                rt.run_buffers::<T>(&name, &[&vals_b, &cols_b, &x_b, &r_b, &p_b, &rr_b])?;
+            xv.copy_from_slice(&out[0]);
+            rv.copy_from_slice(&out[1]);
+            pv.copy_from_slice(&out[2]);
+            rr = out[3][0];
+            resnorm = rr.as_f64().sqrt();
+            iters += 1;
+            if self.config.record_history {
+                history.push(resnorm);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Ell;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    #[test]
+    fn fused_cg_matches_composed_cg() {
+        if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exec = Executor::xla("artifacts").unwrap();
+        let mut rng = Prng::new(71);
+        let n = 300;
+        let mut data = gen_sparse::<f64>(&mut rng, n, n, 3);
+        data.symmetrize();
+        data.shift_diagonal(1.0);
+        let bv = gen_vec::<f64>(&mut rng, n);
+
+        let ell = Ell::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let rt = exec.xla_runtime().unwrap();
+        assert!(FusedCg::supported(rt, &ell));
+
+        let crit = Criterion::residual(1e-10, 400);
+        let mut x_fused = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let fused = FusedCg::new(SolverConfig::with_criterion(crit.clone()))
+            .solve(&ell, &b, &mut x_fused)
+            .unwrap();
+        assert!(fused.converged, "{fused:?}");
+
+        // composed on reference executor
+        let reference = Executor::reference();
+        let csr = crate::Csr::from_data(reference.clone(), &data).unwrap();
+        let br = Dense::vector(reference.clone(), &bv);
+        let mut x_ref = Dense::zeros(reference.clone(), Dim2::new(n, 1));
+        use crate::solver::{Cg, Solver};
+        let composed = Cg::new(SolverConfig::with_criterion(crit))
+            .solve(&csr, &br, &mut x_ref)
+            .unwrap();
+        assert!(composed.converged);
+        crate::testing::prop::assert_close(
+            x_fused.as_slice(),
+            x_ref.as_slice(),
+            1e-6,
+            "fused vs composed solution",
+        );
+    }
+}

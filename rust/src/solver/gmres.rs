@@ -1,0 +1,277 @@
+//! GMRES(m) with restarts [Saad & Schultz 1986].
+//!
+//! Long recurrence: each new Krylov direction is orthogonalized against
+//! the whole basis (modified Gram-Schmidt), the small Hessenberg least-
+//! squares problem is solved with Givens rotations on the host. The
+//! paper (§6.4) observes GMRES maps worst onto the ported backend — the
+//! growing-basis orthogonalization is also why we keep it on the
+//! composed BLAS-1 path instead of a fused-step artifact.
+
+use crate::core::error::Result;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::blas;
+use crate::matrix::dense::Dense;
+use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::stop::StopStatus;
+
+/// GMRES solver with restart length `m`.
+pub struct Gmres {
+    config: SolverConfig,
+    restart: usize,
+}
+
+impl Gmres {
+    /// GMRES with the default restart length 30.
+    pub fn new(config: SolverConfig) -> Self {
+        Self {
+            config,
+            restart: 30,
+        }
+    }
+
+    /// Explicit restart length.
+    pub fn with_restart(mut self, m: usize) -> Self {
+        assert!(m > 0, "restart must be positive");
+        self.restart = m;
+        self
+    }
+}
+
+impl<T: Value> Solver<T> for Gmres {
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        a.check_conformant(b, x)?;
+        let exec = x.executor().clone();
+        let dim = x.shape();
+        let m = self.restart;
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+
+        let bnorm = blas::norm2(&exec, b)?.as_f64();
+        let mut history = Vec::new();
+        let mut total_iters = 0usize;
+        let mut resnorm;
+
+        // Krylov basis kept as individual vectors (host memory).
+        let mut basis: Vec<Dense<T>> = Vec::with_capacity(m + 1);
+        // Hessenberg in column-major: h[j] has j+2 entries.
+        let mut w = Dense::zeros(exec.clone(), dim);
+
+        'outer: loop {
+            // r = b - A x
+            let mut r = b.clone();
+            a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            if self.config.record_history && history.is_empty() {
+                history.push(resnorm);
+            }
+            match crit.check(total_iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    return Ok(SolveResult {
+                        iterations: total_iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    })
+                }
+            }
+
+            let beta = T::from_f64(resnorm);
+            basis.clear();
+            let mut v0 = r.clone();
+            blas::scal(&exec, T::one() / beta, &mut v0)?;
+            basis.push(v0);
+
+            // Givens rotation state + rhs of the LSQ problem
+            let mut cs = vec![T::zero(); m];
+            let mut sn = vec![T::zero(); m];
+            let mut g = vec![T::zero(); m + 1];
+            g[0] = beta;
+            let mut h_cols: Vec<Vec<T>> = Vec::with_capacity(m);
+            let mut inner = 0usize;
+
+            for j in 0..m {
+                // w = A v_j
+                a.apply(&basis[j], &mut w)?;
+                // modified Gram-Schmidt against the whole basis
+                let mut h = vec![T::zero(); j + 2];
+                for (i, vi) in basis.iter().enumerate() {
+                    let hij = blas::dot(&exec, &w, vi)?;
+                    h[i] = hij;
+                    blas::axpy(&exec, -hij, vi, &mut w)?;
+                }
+                let wnorm = blas::norm2(&exec, &w)?;
+                h[j + 1] = wnorm;
+
+                // apply accumulated Givens rotations to the new column
+                for i in 0..j {
+                    let tmp = cs[i] * h[i] + sn[i] * h[i + 1];
+                    h[i + 1] = -sn[i] * h[i] + cs[i] * h[i + 1];
+                    h[i] = tmp;
+                }
+                // new rotation to zero h[j+1]
+                let denom = (h[j] * h[j] + h[j + 1] * h[j + 1]).sqrt();
+                if denom.is_zero() {
+                    cs[j] = T::one();
+                    sn[j] = T::zero();
+                } else {
+                    cs[j] = h[j] / denom;
+                    sn[j] = h[j + 1] / denom;
+                }
+                h[j] = cs[j] * h[j] + sn[j] * h[j + 1];
+                h[j + 1] = T::zero();
+                g[j + 1] = -sn[j] * g[j];
+                g[j] = cs[j] * g[j];
+                h_cols.push(h);
+
+                inner = j + 1;
+                total_iters += 1;
+                resnorm = g[j + 1].as_f64().abs();
+                if self.config.record_history {
+                    history.push(resnorm);
+                }
+                let status = crit.check(total_iters, resnorm, bnorm);
+                if status != StopStatus::Continue || wnorm.is_zero() {
+                    // solve the j+1 upper-triangular system, update x
+                    update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
+                    if status == StopStatus::Converged || wnorm.is_zero() {
+                        return Ok(SolveResult {
+                            iterations: total_iters,
+                            resnorm,
+                            converged: true,
+                        history,
+                        });
+                    }
+                    return Ok(SolveResult {
+                        iterations: total_iters,
+                        resnorm,
+                        converged: false,
+                        history,
+                    });
+                }
+                // next basis vector
+                let mut vnext = w.clone();
+                blas::scal(&exec, T::one() / wnorm, &mut vnext)?;
+                basis.push(vnext);
+            }
+            // restart: fold the Krylov correction into x, continue
+            update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
+            if crit.max_iters > 0 && total_iters >= crit.max_iters {
+                continue 'outer; // handled at loop head
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "gmres"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        // 1 SpMV + (avg restart/2 + 1) orthogonalization dot+axpy pairs
+        let avg_basis = (self.restart / 2 + 1) as u64;
+        2 * nnz as u64 + avg_basis * 4 * n as u64 + 2 * n as u64
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        let avg_basis = (self.restart / 2 + 1) as u64;
+        ((nnz * (elem + 8) + 2 * n * elem) as u64) + avg_basis * (5 * n * elem) as u64
+    }
+}
+
+/// x += V_k y where `R y = g` is the Givens-reduced triangular system.
+fn update_solution<T: Value>(
+    exec: &std::sync::Arc<crate::core::executor::Executor>,
+    x: &mut Dense<T>,
+    basis: &[Dense<T>],
+    h_cols: &[Vec<T>],
+    g: &[T],
+    k: usize,
+) -> Result<()> {
+    // back substitution on the k x k triangular system (host, tiny)
+    let mut y = vec![T::zero(); k];
+    for i in (0..k).rev() {
+        let mut acc = g[i];
+        for j in i + 1..k {
+            acc -= h_cols[j][i] * y[j];
+        }
+        y[i] = acc / h_cols[i][i];
+    }
+    for j in 0..k {
+        blas::axpy(exec, y[j], &basis[j], x)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    #[test]
+    fn converges_without_restart() {
+        let mut rng = Prng::new(51);
+        let n = 150;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let result = Gmres::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 200)))
+            .with_restart(200)
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(result.converged, "{result:?}");
+        let mut r = b.clone();
+        a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+        assert!(r.norm2_host() < 1e-7 * b.norm2_host());
+    }
+
+    #[test]
+    fn converges_with_short_restart() {
+        let mut rng = Prng::new(53);
+        let n = 150;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let result = Gmres::new(SolverConfig::with_criterion(Criterion::residual(1e-8, 2000)))
+            .with_restart(10)
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(result.converged, "{result:?}");
+        let mut r = b.clone();
+        a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+        assert!(r.norm2_host() < 1e-6 * b.norm2_host());
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_not_converged() {
+        let mut rng = Prng::new(57);
+        let n = 100;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let result = Gmres::new(SolverConfig::with_criterion(Criterion::residual(1e-30, 5)))
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(!result.converged);
+        assert_eq!(result.iterations, 5);
+    }
+}

@@ -1,0 +1,96 @@
+//! Iterative Krylov solvers (the paper's §5 / §6.4 workload).
+//!
+//! All four solvers of the paper's evaluation — CG, BiCGSTAB, CGS,
+//! GMRES — plus FCG and Richardson from Ginkgo's wider solver set. Every
+//! solver is generic over precision and executor and applies any
+//! [`LinOp`] operator, so the same driver runs on `reference`, `par` and
+//! the ported `xla` backend.
+//!
+//! `fused` contains the XLA-only fused-iteration drivers that dispatch
+//! one `*_step` artifact per iteration (L2 graphs from
+//! `python/compile/model.py`) — the ablation benches compare them with
+//! the composed drivers here.
+
+mod bicgstab;
+mod cg;
+mod cgs;
+mod fcg;
+pub mod fused;
+mod gmres;
+mod ir;
+mod richardson;
+
+pub use bicgstab::BiCgStab;
+pub use cg::Cg;
+pub use cgs::Cgs;
+pub use fcg::Fcg;
+pub use gmres::Gmres;
+pub use ir::MixedIr;
+pub use richardson::Richardson;
+
+use crate::core::error::Result;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+use crate::stop::Criterion;
+
+/// Outcome of a solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// Completed iterations.
+    pub iterations: usize,
+    /// Final (recurrence) residual norm.
+    pub resnorm: f64,
+    /// Whether the stopping criterion was met by residual.
+    pub converged: bool,
+    /// Per-iteration residual norms (only if `record_history`).
+    pub history: Vec<f64>,
+}
+
+/// Configuration shared by all solvers.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Stopping criterion.
+    pub criterion: Criterion,
+    /// Record the residual-norm history (costs one Vec push per iter).
+    pub record_history: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self {
+            criterion: Criterion::default(),
+            record_history: false,
+        }
+    }
+}
+
+impl SolverConfig {
+    /// Config with the given criterion.
+    pub fn with_criterion(criterion: Criterion) -> Self {
+        Self {
+            criterion,
+            record_history: false,
+        }
+    }
+}
+
+/// Common interface implemented by every solver.
+pub trait Solver<T: Value> {
+    /// Solve `A x = b`, starting from the initial guess in `x`.
+    fn solve(
+        &self,
+        a: &dyn crate::core::linop::LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult>;
+
+    /// Solver name for logs and benches.
+    fn name(&self) -> &'static str;
+
+    /// FLOPs per iteration given matrix nnz and size n (used by the
+    /// perf model; counts SpMV + BLAS-1 work of one iteration).
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64;
+
+    /// Bytes moved per iteration for a given value size (perf model).
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64;
+}

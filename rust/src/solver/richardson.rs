@@ -1,0 +1,130 @@
+//! Richardson iteration (optionally preconditioned): the simplest
+//! stationary solver, `x += omega * M (b - A x)`. In Ginkgo this is the
+//! building block for smoothers; included for solver-set completeness.
+
+use std::sync::Arc;
+
+use crate::core::error::Result;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::blas;
+use crate::matrix::dense::Dense;
+use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::stop::StopStatus;
+
+/// Richardson solver with relaxation factor `omega`.
+pub struct Richardson<T: Value> {
+    config: SolverConfig,
+    omega: T,
+    precond: Option<Arc<dyn LinOp<T>>>,
+}
+
+impl<T: Value> Richardson<T> {
+    /// Richardson with relaxation factor.
+    pub fn new(config: SolverConfig, omega: T) -> Self {
+        Self {
+            config,
+            omega,
+            precond: None,
+        }
+    }
+
+    /// Attach a preconditioner (e.g. Jacobi — giving damped Jacobi).
+    pub fn with_preconditioner(mut self, m: Arc<dyn LinOp<T>>) -> Self {
+        self.precond = Some(m);
+        self
+    }
+}
+
+impl<T: Value> Solver<T> for Richardson<T> {
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        a.check_conformant(b, x)?;
+        let exec = x.executor().clone();
+        let dim = x.shape();
+        let crit = self.config.criterion.started();
+        let crit = &crit;
+
+        let mut r = Dense::zeros(exec.clone(), dim);
+        let mut z = Dense::zeros(exec.clone(), dim);
+        let bnorm = blas::norm2(&exec, b)?.as_f64();
+        let mut history = Vec::new();
+        let mut iters = 0;
+        loop {
+            // r = b - A x (recomputed every iteration — stationary method)
+            r.copy_from(b)?;
+            a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+            let resnorm = blas::norm2(&exec, &r)?.as_f64();
+            if self.config.record_history {
+                history.push(resnorm);
+            }
+            match crit.check(iters, resnorm, bnorm) {
+                StopStatus::Continue => {}
+                status => {
+                    return Ok(SolveResult {
+                        iterations: iters,
+                        resnorm,
+                        converged: status == StopStatus::Converged,
+                        history,
+                    })
+                }
+            }
+            match &self.precond {
+                Some(m) => {
+                    m.apply(&r, &mut z)?;
+                    blas::axpy(&exec, self.omega, &z, x)?;
+                }
+                None => blas::axpy(&exec, self.omega, &r, x)?,
+            }
+            iters += 1;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "richardson"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        2 * nnz as u64 + 3 * 2 * n as u64
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        ((nnz * (elem + 8) + 2 * n * elem) + 2 * 3 * n * elem) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::precond::Jacobi;
+    use crate::stop::Criterion;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    #[test]
+    fn damped_jacobi_converges_on_dominant_system() {
+        let mut rng = Prng::new(61);
+        let n = 100;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 3); // strongly dominant
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let jacobi = Jacobi::from_csr(&a).unwrap();
+        let solver = Richardson::new(
+            SolverConfig::with_criterion(Criterion::residual(1e-10, 2000)),
+            0.9,
+        )
+        .with_preconditioner(std::sync::Arc::new(jacobi));
+        let result = solver.solve(&a, &b, &mut x).unwrap();
+        assert!(result.converged, "{result:?}");
+    }
+}

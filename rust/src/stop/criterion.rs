@@ -1,0 +1,165 @@
+//! Stopping criteria for iterative solvers.
+//!
+//! Mirrors Ginkgo's combined-criterion design: a solver is handed one
+//! [`Criterion`] that may combine an iteration budget with residual
+//! thresholds; the solver consults it once per iteration.
+
+/// Why (or whether) a solver stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopStatus {
+    /// Keep iterating.
+    Continue,
+    /// Residual criterion satisfied.
+    Converged,
+    /// Iteration budget exhausted without convergence.
+    BudgetExhausted,
+}
+
+/// Combined stopping criterion.
+#[derive(Debug, Clone)]
+pub struct Criterion {
+    /// Maximum number of iterations (0 = unlimited — discouraged).
+    pub max_iters: usize,
+    /// Relative residual threshold: stop when `||r|| <= rel_tol * ||b||`.
+    pub rel_tol: f64,
+    /// Absolute residual threshold: stop when `||r|| <= abs_tol`.
+    pub abs_tol: f64,
+    /// Wall-clock budget; `None` = unlimited (Ginkgo's `Time` criterion).
+    pub time_limit: Option<std::time::Duration>,
+    /// Start instant for the time budget, armed by the solver via
+    /// [`Criterion::started`] at solve entry.
+    start: Option<std::time::Instant>,
+}
+
+impl Default for Criterion {
+    fn default() -> Self {
+        Self {
+            max_iters: 1000,
+            rel_tol: 1e-8,
+            abs_tol: 0.0,
+            time_limit: None,
+            start: None,
+        }
+    }
+}
+
+impl Criterion {
+    /// Iteration-count-only criterion (the paper's solver benchmarks run
+    /// exactly 1000 iterations regardless of convergence, §6.4).
+    pub fn iterations(max_iters: usize) -> Self {
+        Self {
+            max_iters,
+            rel_tol: 0.0,
+            abs_tol: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Relative-residual criterion with an iteration budget.
+    pub fn residual(rel_tol: f64, max_iters: usize) -> Self {
+        Self {
+            max_iters,
+            rel_tol,
+            abs_tol: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Add a wall-clock budget; the clock starts at [`Criterion::started`].
+    pub fn with_time_limit(mut self, limit: std::time::Duration) -> Self {
+        self.time_limit = Some(limit);
+        self
+    }
+
+    /// Arm the time budget (called by solvers at solve entry). No-op
+    /// without a time limit.
+    pub fn started(&self) -> Self {
+        let mut c = self.clone();
+        if c.time_limit.is_some() {
+            c.start = Some(std::time::Instant::now());
+        }
+        c
+    }
+
+    /// Evaluate after `iters` completed iterations with residual `resnorm`
+    /// and initial/rhs norm `bnorm`.
+    pub fn check(&self, iters: usize, resnorm: f64, bnorm: f64) -> StopStatus {
+        let rel_hit = self.rel_tol > 0.0 && resnorm <= self.rel_tol * bnorm;
+        let abs_hit = self.abs_tol > 0.0 && resnorm <= self.abs_tol;
+        if rel_hit || abs_hit {
+            return StopStatus::Converged;
+        }
+        if self.max_iters > 0 && iters >= self.max_iters {
+            return StopStatus::BudgetExhausted;
+        }
+        if let (Some(limit), Some(start)) = (self.time_limit, self.start) {
+            if start.elapsed() >= limit {
+                return StopStatus::BudgetExhausted;
+            }
+        }
+        StopStatus::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_only_never_converges() {
+        let c = Criterion::iterations(10);
+        assert_eq!(c.check(5, 1e-30, 1.0), StopStatus::Continue);
+        assert_eq!(c.check(10, 1e-30, 1.0), StopStatus::BudgetExhausted);
+    }
+
+    #[test]
+    fn relative_residual() {
+        let c = Criterion::residual(1e-6, 100);
+        assert_eq!(c.check(1, 1e-3, 1.0), StopStatus::Continue);
+        assert_eq!(c.check(1, 9e-7, 1.0), StopStatus::Converged);
+        // scaled by bnorm
+        assert_eq!(c.check(1, 9e-4, 1000.0), StopStatus::Converged);
+    }
+
+    #[test]
+    fn absolute_residual() {
+        let c = Criterion {
+            max_iters: 100,
+            rel_tol: 0.0,
+            abs_tol: 1e-10,
+            ..Default::default()
+        };
+        assert_eq!(c.check(1, 1e-9, 1e20), StopStatus::Continue);
+        assert_eq!(c.check(1, 1e-11, 1e20), StopStatus::Converged);
+    }
+
+    #[test]
+    fn time_budget_stops() {
+        let c = Criterion::iterations(1_000_000)
+            .with_time_limit(std::time::Duration::from_millis(5))
+            .started();
+        assert_eq!(c.check(1, 1.0, 1.0), StopStatus::Continue);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(c.check(2, 1.0, 1.0), StopStatus::BudgetExhausted);
+        // converged still wins over time
+        let c2 = Criterion::residual(1e-1, 10)
+            .with_time_limit(std::time::Duration::from_nanos(1))
+            .started();
+        assert_eq!(c2.check(1, 1e-3, 1.0), StopStatus::Converged);
+    }
+
+    #[test]
+    fn unarmed_time_limit_is_inert() {
+        let c = Criterion::iterations(10)
+            .with_time_limit(std::time::Duration::from_nanos(1));
+        // not started(): never trips
+        assert_eq!(c.check(1, 1.0, 1.0), StopStatus::Continue);
+    }
+
+    #[test]
+    fn budget_wins_only_when_not_converged() {
+        let c = Criterion::residual(1e-6, 10);
+        assert_eq!(c.check(10, 1e-9, 1.0), StopStatus::Converged);
+        assert_eq!(c.check(10, 1.0, 1.0), StopStatus::BudgetExhausted);
+    }
+}

@@ -1,0 +1,5 @@
+//! Stopping criteria (Ginkgo's `stop` namespace).
+
+mod criterion;
+
+pub use criterion::{Criterion, StopStatus};

@@ -1,0 +1,9 @@
+//! Test support: deterministic PRNG and a tiny property-testing harness.
+//!
+//! The offline vendor set ships neither `rand` nor `proptest`, so both are
+//! hand-rolled here. Exposed as a normal (non-`cfg(test)`) module because
+//! the matrix generators (`matgen`) use the same PRNG and the integration
+//! tests / benches need it too.
+
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,123 @@
+//! Minimal property-testing harness (no `proptest` in the vendor set).
+//!
+//! `for_all` runs a property over `cases` generated inputs and reports the
+//! seed of the first failing case so it can be replayed; generators for
+//! random vectors and sparse matrices live here so every module states
+//! its invariants the same way.
+
+use crate::core::dim::Dim2;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::testing::prng::Prng;
+
+/// Run `prop(rng, case_index)` for `cases` cases; panic with the failing
+/// seed on the first violation. Properties signal failure by panicking.
+pub fn for_all(seed: u64, cases: usize, prop: impl Fn(&mut Prng, usize)) {
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Prng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random vector in [-1, 1).
+pub fn gen_vec<T: Value>(rng: &mut Prng, n: usize) -> Vec<T> {
+    (0..n).map(|_| T::from_f64(rng.uniform(-1.0, 1.0))).collect()
+}
+
+/// Random sparse matrix with ~`avg_nnz_per_row` entries per row plus a
+/// dominant diagonal (keeps iterative solvers convergent).
+pub fn gen_sparse<T: Value>(
+    rng: &mut Prng,
+    rows: usize,
+    cols: usize,
+    avg_nnz_per_row: usize,
+) -> MatrixData<T> {
+    let mut data = MatrixData::new(Dim2::new(rows, cols));
+    for i in 0..rows {
+        let k = rng.below(2 * avg_nnz_per_row + 1);
+        for _ in 0..k {
+            data.push(
+                i as i32,
+                rng.below(cols) as i32,
+                T::from_f64(rng.uniform(-1.0, 1.0)),
+            );
+        }
+    }
+    if rows == cols {
+        data.shift_diagonal(T::from_f64(2.0 * (avg_nnz_per_row + 1) as f64));
+    }
+    data.normalize();
+    data
+}
+
+/// Assert two slices are element-wise close with mixed abs/rel tolerance.
+#[track_caller]
+pub fn assert_close<T: Value>(a: &[T], b: &[T], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for i in 0..a.len() {
+        let (x, y) = (a[i].as_f64(), b[i].as_f64());
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}: mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        for_all(1, 20, |rng, _| {
+            let v = rng.unit();
+            assert!((0.0..1.0).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn for_all_reports_failing_seed() {
+        for_all(1, 20, |rng, _| {
+            assert!(rng.unit() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn gen_sparse_is_valid_and_diag_dominant() {
+        let mut rng = Prng::new(11);
+        let d = gen_sparse::<f64>(&mut rng, 50, 50, 4);
+        d.validate().unwrap();
+        assert!(d.is_normalized());
+        let dense = d.to_dense_vec();
+        for i in 0..50 {
+            let diag = dense[i * 50 + i].abs();
+            let off: f64 = (0..50)
+                .filter(|&j| j != i)
+                .map(|j| dense[i * 50 + j].abs())
+                .sum();
+            assert!(diag > off, "row {i} not dominant: {diag} <= {off}");
+        }
+    }
+
+    #[test]
+    fn assert_close_tolerates_and_catches() {
+        assert_close(&[1.0f64, 2.0], &[1.0 + 1e-13, 2.0], 1e-12, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_close(&[1.0f64], &[1.1], 1e-12, "bad");
+        });
+        assert!(r.is_err());
+    }
+}

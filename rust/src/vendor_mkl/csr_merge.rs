@@ -1,0 +1,271 @@
+//! Merge-path CSR SpMV.
+//!
+//! The merge-path formulation treats SpMV as a 2-D merge of the
+//! row-pointer array with the nonzero index range: each thread gets an
+//! equal-length diagonal of the merge grid, which balances work by
+//! *nonzeros* regardless of row lengths [Merrill & Garland 2016].
+//! Partial sums for rows shared between threads are fixed up in a short
+//! sequential carry pass.
+
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::Result;
+use crate::core::executor::{Executor, ParConfig};
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::kernels::ptr::SlicePtr;
+use crate::matrix::csr::Csr;
+use crate::matrix::dense::Dense;
+
+/// Find the merge-path split point for diagonal `diag`: returns the row
+/// index `i` such that the first `diag` merge steps consume row
+/// boundaries `..i` and nonzeros `..(diag - i)`.
+fn merge_path_search(diag: usize, row_ptrs: &[i32], nnz: usize) -> usize {
+    let nrows = row_ptrs.len() - 1;
+    let mut lo = diag.saturating_sub(nnz);
+    let mut hi = diag.min(nrows);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        // consume row boundary `mid` before nonzero `diag - mid - 1`?
+        if (row_ptrs[mid + 1] as usize) <= diag - mid - 1 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// x = A b with merge-path scheduling (single rhs).
+///
+/// Phase 1: each thread walks its merge-grid diagonal range, writing
+/// rows it owns exclusively and accumulating a carry for its first
+/// (possibly shared) row. Phase 2: carries are added sequentially.
+pub fn merge_csr_spmv<T: Value>(cfg: &ParConfig, a: &Csr<T>, b: &Dense<T>, x: &mut Dense<T>) {
+    let nrows = a.shape().rows;
+    let nnz = a.nnz();
+    let row_ptrs = a.row_ptrs();
+    let col_idxs = a.col_idxs();
+    let values = a.values();
+    let bs = b.as_slice();
+    let threads = cfg.effective_threads().max(1).min(nrows.max(1));
+    let total = nrows + nnz;
+    let chunk = total.div_ceil(threads);
+
+    let xs = x.as_mut_slice();
+    xs.fill(T::zero());
+    let xptr = SlicePtr(xs.as_mut_ptr());
+
+    // carries[t] = (first row of thread t, its partial contribution)
+    let carries: Vec<(usize, T)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let xptr = &xptr;
+                s.spawn(move || {
+                    let d0 = (t * chunk).min(total);
+                    let d1 = ((t + 1) * chunk).min(total);
+                    let row0 = merge_path_search(d0, row_ptrs, nnz);
+                    let row1 = merge_path_search(d1, row_ptrs, nnz);
+                    let mut k = d0 - row0; // first owned nonzero
+                    let k_end = d1 - row1; // first nonzero past the chunk
+                    let mut carry = T::zero();
+                    let mut row = row0;
+                    // rows fully or partially inside this chunk
+                    while row <= row1 && row < nrows {
+                        let boundary = if row < row1 {
+                            row_ptrs[row + 1] as usize
+                        } else {
+                            k_end // trailing partial row
+                        };
+                        let mut acc = T::zero();
+                        while k < boundary {
+                            acc += values[k] * bs[col_idxs[k] as usize];
+                            k += 1;
+                        }
+                        if row == row0 || row == row1 {
+                            // shared with a neighbor thread -> carry;
+                            // (row0 shares left, row1 shares right: the
+                            // right neighbor records it as ITS row0, so
+                            // only the in-chunk part goes through carry)
+                            if row == row0 {
+                                carry += acc;
+                            } else {
+                                // row1 > row0: exclusively-owned part of
+                                // the trailing row goes via atomic-free
+                                // accumulate too; the right neighbor adds
+                                // its own part as carry. Writing += here
+                                // is safe: the neighbor only touches this
+                                // row through the sequential carry pass.
+                                // SAFETY: see above.
+                                unsafe { *xptr.at(row) += acc };
+                            }
+                        } else {
+                            // SAFETY: rows strictly between row0 and row1
+                            // are owned by exactly this thread.
+                            unsafe { *xptr.at(row) += acc };
+                        }
+                        if row == row1 {
+                            break;
+                        }
+                        row += 1;
+                    }
+                    (row0, carry)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("merge spmv worker panicked"))
+            .collect()
+    });
+    // sequential carry fixup
+    for (row, val) in carries {
+        if row < nrows {
+            xs[row] += val;
+        }
+    }
+}
+
+/// Vendor-style CSR operator: merge-path scheduled SpMV (the oneMKL
+/// comparison slot of Fig. 8 / Fig. 10).
+pub struct VendorCsr<T> {
+    inner: Csr<T>,
+    cfg: ParConfig,
+}
+
+impl<T: Value> VendorCsr<T> {
+    /// Wrap a CSR matrix with vendor-style scheduling.
+    pub fn new(inner: Csr<T>) -> Self {
+        Self {
+            inner,
+            cfg: ParConfig::default(),
+        }
+    }
+
+    /// Explicit thread configuration.
+    pub fn with_config(mut self, cfg: ParConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// The wrapped CSR matrix.
+    pub fn inner(&self) -> &Csr<T> {
+        &self.inner
+    }
+}
+
+impl<T: Value> LinOp<T> for VendorCsr<T> {
+    fn shape(&self) -> Dim2 {
+        self.inner.shape()
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        self.inner.executor()
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        merge_csr_spmv(&self.cfg, &self.inner, b, x);
+        Ok(())
+    }
+
+    fn op_name(&self) -> &'static str {
+        "vendor_csr"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{assert_close, gen_sparse, gen_vec};
+
+    #[test]
+    fn merge_path_search_basics() {
+        // 2 rows: row 0 has 3 nnz, row 1 has 1
+        let rp = [0, 3, 4];
+        assert_eq!(merge_path_search(0, &rp, 4), 0);
+        // full grid length = rows + nnz = 6
+        assert_eq!(merge_path_search(6, &rp, 4), 2);
+        // monotone
+        let mut prev = 0;
+        for d in 0..=6 {
+            let r = merge_path_search(d, &rp, 4);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_random() {
+        let mut rng = Prng::new(91);
+        for trial in 0..6 {
+            let n = 50 + rng.below(300);
+            let data = gen_sparse::<f64>(&mut rng, n, n, 6);
+            let exec = Executor::reference();
+            let a = Csr::from_data(exec.clone(), &data).unwrap();
+            let bv = gen_vec::<f64>(&mut rng, n);
+            let b = Dense::vector(exec.clone(), &bv);
+            let mut expect = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            a.apply(&b, &mut expect).unwrap();
+            for threads in [1, 2, 4, 7] {
+                let v = VendorCsr::new(a.clone()).with_config(ParConfig {
+                    threads,
+                    seq_threshold: 0,
+                });
+                let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+                v.apply(&b, &mut x).unwrap();
+                assert_close(
+                    x.as_slice(),
+                    expect.as_slice(),
+                    1e-12,
+                    &format!("trial {trial} threads {threads}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn handles_skewed_rows_and_empty_rows() {
+        let mut rng = Prng::new(92);
+        let n = 128;
+        let mut data = crate::MatrixData::<f64>::new(Dim2::square(n));
+        // one huge row, many empty rows
+        for j in 0..n {
+            data.push(5, j as i32, rng.uniform(-1.0, 1.0));
+        }
+        for i in (0..n).step_by(3) {
+            data.push(i as i32, ((i * 7) % n) as i32, rng.uniform(-1.0, 1.0));
+        }
+        data.normalize();
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut expect = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        a.apply(&b, &mut expect).unwrap();
+        for threads in [1, 3, 8] {
+            let v = VendorCsr::new(a.clone()).with_config(ParConfig {
+                threads,
+                seq_threshold: 0,
+            });
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            v.apply(&b, &mut x).unwrap();
+            assert_close(x.as_slice(), expect.as_slice(), 1e-12, "skewed");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let exec = Executor::reference();
+        let data = crate::MatrixData::<f64>::new(Dim2::square(10));
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let v = VendorCsr::new(a);
+        let b = Dense::vector(exec.clone(), &[1.0; 10]);
+        let mut x = Dense::vector(exec.clone(), &[9.0; 10]);
+        v.apply(&b, &mut x).unwrap();
+        assert_eq!(x.as_slice(), &[0.0; 10]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Vendor-library stand-in (oneMKL's sparse CSR SpMV).
+//!
+//! The paper compares Ginkgo's kernels against Intel oneMKL's CSR SpMV.
+//! oneMKL is closed-source and Intel-GPU-only, so the comparison slot is
+//! filled by a *different real implementation with different scheduling
+//! characteristics*: a merge-path CSR SpMV (Merrill & Garland 2016 — the
+//! algorithm vendor libraries commonly ship). Its perfectly
+//! nonzero-balanced partitioning behaves differently from sparkle's
+//! row-parallel kernel on skewed matrices, reproducing the
+//! "vendor kernel inconsistency" effect of §6.5 with mechanism instead
+//! of mockery. The perf model carries the matching efficiency curve.
+
+mod csr_merge;
+
+pub use csr_merge::{merge_csr_spmv, VendorCsr};

@@ -1,0 +1,272 @@
+//! Cross-module integration tests: generators → formats → solvers →
+//! verification, across executors; MatrixMarket round trips; suite
+//! coverage. (XLA-executor specifics live in `xla_backend.rs`.)
+
+use std::sync::Arc;
+
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::{suite, MatrixStats};
+use sparkle::matrix::conversion::{self, FromData};
+use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::precond::Jacobi;
+use sparkle::solver::{BiCgStab, Cg, Fcg, Gmres, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::testing::prng::Prng;
+use sparkle::testing::prop::{assert_close, for_all, gen_sparse, gen_vec};
+use sparkle::{Dim2, MatrixData};
+
+// ------------------------------------------------------------- solvers
+
+/// Every solver solves every (appropriately conditioned) Table-1 analog
+/// on both host executors and the solutions agree across executors.
+#[test]
+fn all_solvers_on_suite_matrices() {
+    let scale = 2048; // small but structurally faithful analogs
+    // SPD-ish entries for CG/FCG; all are diagonally dominant, so the
+    // unsymmetric solvers handle every entry
+    for entry in suite::table1() {
+        let data = entry.generate::<f64>(scale);
+        let n = data.dim.rows;
+        let exec = Executor::par_with_threads(2);
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+        let crit = Criterion::residual(1e-7, 3000);
+        let solvers: Vec<(&str, Box<dyn Solver<f64>>)> = vec![
+            ("bicgstab", Box::new(BiCgStab::new(SolverConfig::with_criterion(crit.clone())))),
+            ("gmres", Box::new(Gmres::new(SolverConfig::with_criterion(crit.clone())))),
+        ];
+        for (name, solver) in solvers {
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let r = solver.solve(&a, &b, &mut x).unwrap();
+            assert!(
+                r.converged,
+                "{name} failed on {} (n={n}): {r:?}",
+                entry.name
+            );
+            // verify the true residual
+            let mut resid = b.clone();
+            a.apply_advanced(-1.0, &x, 1.0, &mut resid).unwrap();
+            let rel = resid.norm2_host() / b.norm2_host();
+            assert!(rel < 1e-5, "{name} on {}: true residual {rel}", entry.name);
+        }
+    }
+}
+
+/// CG/FCG on symmetrized systems: identical solutions across executors.
+#[test]
+fn symmetric_solvers_cross_executor_agreement() {
+    let mut rng = Prng::new(404);
+    let n = 300;
+    let mut data = gen_sparse::<f64>(&mut rng, n, n, 4);
+    data.symmetrize();
+    data.shift_diagonal(1.0);
+    let bv = gen_vec::<f64>(&mut rng, n);
+    let crit = Criterion::residual(1e-11, 600);
+
+    let mut solutions: Vec<Vec<f64>> = Vec::new();
+    for exec in [Executor::reference(), Executor::par_with_threads(4)] {
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        for solver in [
+            Box::new(Cg::new(SolverConfig::with_criterion(crit.clone()))) as Box<dyn Solver<f64>>,
+            Box::new(Fcg::new(SolverConfig::with_criterion(crit.clone()))),
+        ] {
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let r = solver.solve(&a, &b, &mut x).unwrap();
+            assert!(r.converged, "{} on {}", solver.name(), exec.name());
+            solutions.push(x.as_slice().to_vec());
+        }
+    }
+    for s in &solutions[1..] {
+        assert_close(s, &solutions[0], 1e-6, "cross-executor solution");
+    }
+}
+
+/// The solver works through *any* format's LinOp (same operator, four
+/// storage layouts, same solution).
+#[test]
+fn solver_format_independence() {
+    let mut rng = Prng::new(405);
+    let n = 200;
+    let mut data = gen_sparse::<f64>(&mut rng, n, n, 4);
+    data.symmetrize();
+    data.shift_diagonal(1.0);
+    let exec = Executor::reference();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let crit = Criterion::residual(1e-10, 500);
+    let mut first: Option<Vec<f64>> = None;
+    let ops: Vec<Box<dyn LinOp<f64>>> = vec![
+        Box::new(Csr::from_data(exec.clone(), &data).unwrap()),
+        Box::new(Coo::from_data(exec.clone(), &data).unwrap()),
+        Box::new(Ell::from_data(exec.clone(), &data).unwrap()),
+        Box::new(SellP::from_data(exec.clone(), &data).unwrap()),
+        Box::new(Hybrid::from_data(exec.clone(), &data).unwrap()),
+    ];
+    for op in &ops {
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let r = Cg::new(SolverConfig::with_criterion(crit.clone()))
+            .solve(op.as_ref(), &b, &mut x)
+            .unwrap();
+        assert!(r.converged, "format {}", op.op_name());
+        match &first {
+            None => first = Some(x.as_slice().to_vec()),
+            Some(f) => assert_close(x.as_slice(), f, 1e-8, op.op_name()),
+        }
+    }
+}
+
+/// Preconditioned CG through the full stack on a generated FEM problem.
+#[test]
+fn jacobi_pcg_on_fem() {
+    let data = sparkle::matgen::fem::fem::<f64>(400, 6, 1, 9);
+    let n = data.dim.rows;
+    let exec = Executor::par_with_threads(2);
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let jacobi = Jacobi::from_csr(&a).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let r = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-9, 1000)))
+        .with_preconditioner(Arc::new(jacobi))
+        .solve(&a, &b, &mut x)
+        .unwrap();
+    assert!(r.converged, "{r:?}");
+}
+
+// ----------------------------------------------------- conversions / io
+
+/// Property: every format round-trips any random matrix through
+/// MatrixData without changing its dense image.
+#[test]
+fn prop_format_round_trips() {
+    for_all(0xC0FFEE, 10, |rng, _| {
+        let n = 20 + rng.below(60);
+        let data = gen_sparse::<f64>(rng, n, n, 4);
+        let expect = data.to_dense_vec();
+        let exec = Executor::reference();
+        macro_rules! check {
+            ($ty:ident) => {
+                let m = $ty::from_data_on(exec.clone(), &data).unwrap();
+                let back = conversion::ToData::<f64>::to_data_generic(&m);
+                assert_eq!(back.to_dense_vec(), expect, stringify!($ty));
+            };
+        }
+        check!(Csr);
+        check!(Coo);
+        check!(Ell);
+        check!(SellP);
+        check!(Hybrid);
+    });
+}
+
+/// Property: SpMV agrees across formats and executors on random input.
+#[test]
+fn prop_spmv_format_executor_agreement() {
+    for_all(0xBEEF, 8, |rng, _| {
+        let n = 30 + rng.below(120);
+        let data = gen_sparse::<f64>(rng, n, n, 5);
+        let bv = gen_vec::<f64>(rng, n);
+        let reference = Executor::reference();
+        let csr = Csr::from_data(reference.clone(), &data).unwrap();
+        let b = Dense::vector(reference.clone(), &bv);
+        let mut expect = Dense::zeros(reference.clone(), Dim2::new(n, 1));
+        csr.apply(&b, &mut expect).unwrap();
+        for exec in [Executor::reference(), Executor::par_with_threads(3)] {
+            let b = Dense::vector(exec.clone(), &bv);
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let ops: Vec<Box<dyn LinOp<f64>>> = vec![
+                Box::new(Csr::from_data(exec.clone(), &data).unwrap()),
+                Box::new(Coo::from_data(exec.clone(), &data).unwrap()),
+                Box::new(Ell::from_data(exec.clone(), &data).unwrap()),
+                Box::new(SellP::from_data(exec.clone(), &data).unwrap()),
+                Box::new(sparkle::vendor_mkl::VendorCsr::new(
+                    Csr::from_data(exec.clone(), &data).unwrap(),
+                )),
+            ];
+            for op in ops {
+                op.apply(&b, &mut x).unwrap();
+                assert_close(
+                    x.as_slice(),
+                    expect.as_slice(),
+                    1e-11,
+                    &format!("{} on {}", op.op_name(), exec.name()),
+                );
+            }
+        }
+    });
+}
+
+/// MatrixMarket round trip through a real file + reload into another
+/// format (the CLI's `gen --out` path).
+#[test]
+fn mtx_file_round_trip_through_formats() {
+    let data = suite::table1_entry("thermal2")
+        .unwrap()
+        .generate::<f64>(4096);
+    let dir = std::env::temp_dir().join("sparkle_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("thermal2_scaled.mtx");
+    sparkle::io::write_matrix_market(&path, &data).unwrap();
+    let back: MatrixData<f64> = sparkle::io::read_matrix_market(&path).unwrap();
+    assert_eq!(back.dim, data.dim);
+    assert_eq!(back.nnz(), data.nnz());
+    // SpMV equality through the reloaded matrix
+    let exec = Executor::reference();
+    let a1 = Csr::from_data(exec.clone(), &data).unwrap();
+    let a2 = Csr::from_data(exec.clone(), &back).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(data.dim.rows, 1), 1.0);
+    let mut x1 = Dense::zeros(exec.clone(), Dim2::new(data.dim.rows, 1));
+    let mut x2 = x1.clone();
+    a1.apply(&b, &mut x1).unwrap();
+    a2.apply(&b, &mut x2).unwrap();
+    assert_close(x1.as_slice(), x2.as_slice(), 1e-12, "mtx round trip");
+    std::fs::remove_file(path).ok();
+}
+
+// ------------------------------------------------------------ matgen
+
+/// Structure statistics drive the perf model: verify stats are stable
+/// across scales for each generator class (density and irregularity are
+/// scale-invariants of the generator).
+#[test]
+fn generator_stats_scale_invariant() {
+    for entry in suite::table1() {
+        let small = MatrixStats::from_data(&entry.generate::<f64>(4096));
+        let large = MatrixStats::from_data(&entry.generate::<f64>(512));
+        let density_ratio = small.avg_row / large.avg_row;
+        assert!(
+            (0.4..2.5).contains(&density_ratio),
+            "{}: density drifts with scale ({:.2} vs {:.2})",
+            entry.name,
+            small.avg_row,
+            large.avg_row
+        );
+    }
+}
+
+/// Failure injection: malformed inputs surface as errors, not panics.
+#[test]
+fn failure_paths_are_errors() {
+    let exec = Executor::reference();
+    // dimension mismatch in apply
+    let data = gen_sparse::<f64>(&mut Prng::new(1), 10, 10, 2);
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(7, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(10, 1));
+    assert!(a.apply(&b, &mut x).is_err());
+    // singular Jacobi
+    let mut d = MatrixData::<f64>::new(Dim2::square(2));
+    d.push(0, 1, 1.0);
+    d.push(1, 0, 1.0);
+    let sing = Csr::from_data(exec.clone(), &d).unwrap();
+    assert!(Jacobi::from_csr(&sing).is_err());
+    // unknown mtx
+    assert!(sparkle::io::read_matrix_market::<f64>("/definitely/not/here.mtx").is_err());
+    // xla executor without artifacts
+    assert!(Executor::xla("/nonexistent_artifacts_dir").is_ok()); // dir missing -> empty manifest
+    let e = Executor::xla("/nonexistent_artifacts_dir").unwrap();
+    let a2 = Csr::from_data(e.clone(), &data).unwrap();
+    let b2 = Dense::filled(e.clone(), Dim2::new(10, 1), 1.0);
+    let mut x2 = Dense::zeros(e.clone(), Dim2::new(10, 1));
+    assert!(a2.apply(&b2, &mut x2).is_err(), "missing artifacts must error");
+}
