@@ -6,6 +6,7 @@
 //! (The XLA executor needs `make artifacts` once; the example skips it
 //! gracefully when artifacts are missing.)
 
+use sparkle::autotune::AutoMatrix;
 use sparkle::core::executor::Executor;
 use sparkle::core::linop::LinOp;
 use sparkle::matgen::stencil;
@@ -61,6 +62,26 @@ fn main() -> sparkle::Result<()> {
         result.converged, result.iterations, result.resnorm
     );
     assert!(result.converged);
+
+    // 5. automatic format selection: let the autotuner pick the storage
+    //    format (features -> roofline prior -> top-k measurement), then
+    //    use it like any other operator — or skip the ceremony entirely
+    //    with `solve_data`
+    let auto = AutoMatrix::from_data(exec.clone(), &data)?;
+    println!(
+        "autotune chose {} (source {:?}, {} measurement applies)",
+        auto.chosen_format(),
+        auto.report().source,
+        auto.report().measure_applies
+    );
+    let mut xa = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let auto_result = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 1000)))
+        .solve_data(&exec, &data, &b, &mut xa)?;
+    assert!(auto_result.converged);
+    println!(
+        "CG via solve_data: converged={} in {} iterations",
+        auto_result.converged, auto_result.iterations
+    );
     println!("quickstart OK");
     Ok(())
 }

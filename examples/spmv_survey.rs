@@ -6,6 +6,7 @@
 //!
 //! The optional argument picks a Table-1 matrix (default: thermal2).
 
+use sparkle::autotune::AutoMatrix;
 use sparkle::bench_util::{f2, Table, Timer};
 use sparkle::core::executor::Executor;
 use sparkle::core::linop::LinOp;
@@ -66,6 +67,25 @@ fn main() -> sparkle::Result<()> {
         }
     }
     t.print();
+
+    println!("\n-- automatic format selection (autotune) --");
+    for exec in &execs {
+        if matches!(&**exec, sparkle::Executor::Xla(_)) {
+            continue; // tuning wants host-timed applies
+        }
+        let auto = AutoMatrix::from_data(exec.clone(), &data)?;
+        let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+        let st = timer.run(|| auto.apply(&b, &mut x).unwrap());
+        println!(
+            "{:>9}: chose {} ({:?}, {} tuning applies) -> {} GF/s",
+            exec.name(),
+            auto.chosen_format(),
+            auto.report().source,
+            auto.report().measure_applies,
+            f2(st.rate_giga(flops)),
+        );
+    }
 
     println!("\n-- device-model projection at published size (n={}, nnz={}) --", full.n, full.nnz);
     let mut t2 = Table::new(&["device", "precision", "csr GF/s", "coo GF/s", "vendor GF/s"]);

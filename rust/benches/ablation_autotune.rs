@@ -1,0 +1,175 @@
+//! Ablation: autotuned format selection vs the best hand-picked format.
+//!
+//! For every matrix in the `matgen` suite this measures all viable
+//! formats on the host `par` executor, lets [`AutoMatrix`] make its own
+//! choice, and reports the *regret* — chosen-format throughput as a
+//! fraction of the best hand-picked format's throughput. The
+//! acceptance bar is a geometric-mean ratio >= 0.90: the tuner may
+//! occasionally pick the runner-up on near-ties, but must never pick a
+//! badly losing format.
+//!
+//! Emits `BENCH_autotune.json` (machine-readable) next to the table.
+
+use std::io::Write as _;
+
+use sparkle::autotune::{prior, AutoConfig, AutoMatrix, Features, FormatChoice};
+use sparkle::bench_util::{bench_scale, f2, spmv_suite, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matrix::Dense;
+use sparkle::Dim2;
+
+const JSON_PATH: &str = "BENCH_autotune.json";
+
+struct Row {
+    name: String,
+    n: usize,
+    nnz: usize,
+    best_format: FormatChoice,
+    best_us: f64,
+    best_gflops: f64,
+    chosen_format: FormatChoice,
+    chosen_us: f64,
+    chosen_gflops: f64,
+    source: String,
+    ratio: f64,
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: autotune regret vs best hand-picked format ==");
+    println!("   (par executor, matgen suite, scale {scale})\n");
+    let exec = Executor::par();
+    let timer = Timer::default();
+    // no persistence: every matrix is a cold-start tuning decision
+    let cfg = AutoConfig::default();
+
+    let suite = spmv_suite::<f64>(scale);
+    let mut rows: Vec<Row> = Vec::new();
+    for m in &suite {
+        let feats = Features::from_data(&m.data);
+        let flops = 2.0 * feats.nnz as f64;
+        let b = Dense::filled(exec.clone(), Dim2::new(feats.cols, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(feats.rows, 1));
+
+        // exhaustive hand-picked baseline over every viable format
+        let mut best: Option<(FormatChoice, f64, f64)> = None;
+        for &format in FormatChoice::ALL.iter() {
+            if !prior::supported_on(&exec, format) {
+                continue;
+            }
+            if format == FormatChoice::Ell && !prior::ell_is_viable(&feats) {
+                continue; // padding blow-up: a human would not pick ELL
+            }
+            let op = match sparkle::autotune::measure::build_format(
+                exec.clone(),
+                &m.data,
+                format,
+            ) {
+                Ok(op) => op,
+                Err(_) => continue,
+            };
+            let stats = timer.run(|| op.apply(&b, &mut x).unwrap());
+            let us = stats.median * 1e6;
+            let gf = stats.rate_giga(flops);
+            if best.map_or(true, |(_, bus, _)| us < bus) {
+                best = Some((format, us, gf));
+            }
+        }
+        let (best_format, best_us, best_gflops) =
+            best.expect("at least CSR is always viable");
+
+        // the tuner's pick, timed under the identical harness
+        let auto = AutoMatrix::with_config(exec.clone(), &m.data, &cfg).unwrap();
+        let stats = timer.run(|| auto.apply(&b, &mut x).unwrap());
+        let chosen_us = stats.median * 1e6;
+        let chosen_gflops = stats.rate_giga(flops);
+        // regret in time, which is throughput ratio chosen/best
+        let ratio = best_us / chosen_us.max(1e-12);
+
+        rows.push(Row {
+            name: m.name.clone(),
+            n: feats.rows,
+            nnz: feats.nnz,
+            best_format,
+            best_us,
+            best_gflops,
+            chosen_format: auto.chosen_format(),
+            chosen_us,
+            chosen_gflops,
+            source: format!("{:?}", auto.report().source).to_lowercase(),
+            ratio,
+        });
+    }
+
+    let mut t = Table::new(&[
+        "matrix", "best", "best GF/s", "chosen", "chosen GF/s", "ratio", "source",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            r.best_format.to_string(),
+            f2(r.best_gflops),
+            r.chosen_format.to_string(),
+            f2(r.chosen_gflops),
+            f2(r.ratio),
+            r.source.clone(),
+        ]);
+    }
+    t.print();
+
+    let geomean = (rows.iter().map(|r| r.ratio.max(1e-12).ln()).sum::<f64>()
+        / rows.len().max(1) as f64)
+        .exp();
+    let hits = rows
+        .iter()
+        .filter(|r| r.chosen_format == r.best_format)
+        .count();
+    println!(
+        "\ngeomean chosen/best throughput ratio: {geomean:.3} \
+         (exact picks {hits}/{})",
+        rows.len()
+    );
+    println!(
+        "acceptance (>= 0.90): {}",
+        if geomean >= 0.90 { "PASS" } else { "FAIL" }
+    );
+
+    write_json(&rows, scale, geomean).expect("write BENCH_autotune.json");
+    println!("wrote {JSON_PATH}");
+}
+
+/// Hand-rolled JSON (no serde in the dependency closure).
+fn write_json(rows: &[Row], scale: usize, geomean: f64) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"sparkle/ablation_autotune/v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str("  \"executor\": \"par\",\n");
+    s.push_str("  \"precision\": \"f64\",\n");
+    s.push_str("  \"matrices\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"name\": \"{}\", ", r.name));
+        s.push_str(&format!("\"n\": {}, ", r.n));
+        s.push_str(&format!("\"nnz\": {}, ", r.nnz));
+        s.push_str(&format!("\"best_format\": \"{}\", ", r.best_format));
+        s.push_str(&format!("\"best_us\": {:.3}, ", r.best_us));
+        s.push_str(&format!("\"best_gflops\": {:.4}, ", r.best_gflops));
+        s.push_str(&format!("\"chosen_format\": \"{}\", ", r.chosen_format));
+        s.push_str(&format!("\"chosen_us\": {:.3}, ", r.chosen_us));
+        s.push_str(&format!("\"chosen_gflops\": {:.4}, ", r.chosen_gflops));
+        s.push_str(&format!("\"source\": \"{}\", ", r.source));
+        s.push_str(&format!("\"ratio\": {:.4}", r.ratio));
+        s.push_str(if i + 1 == rows.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"geomean_ratio\": {geomean:.4},\n"));
+    s.push_str(&format!(
+        "  \"acceptance_0p9\": {}\n",
+        geomean >= 0.90
+    ));
+    s.push_str("}\n");
+    let mut f = std::fs::File::create(JSON_PATH)?;
+    f.write_all(s.as_bytes())
+}

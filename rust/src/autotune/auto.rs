@@ -1,0 +1,359 @@
+//! [`AutoMatrix`]: the self-selecting sparse operator.
+//!
+//! Construction runs the full selection pipeline — features → cached
+//! decision? → roofline prior → top-k measurement — and wraps the
+//! winning format behind [`LinOp`], so every solver and every call site
+//! that takes an operator works unchanged. The [`AutoReport`] records
+//! what was decided and why, including how many measurement applies
+//! were spent (zero on a warm cache — the property the cache exists
+//! to provide).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::Result;
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use crate::perfmodel::Device;
+
+use super::cache::{cache_key, CacheEntry, TuneCache};
+use super::features::Features;
+use super::measure::{measure_formats, MeasurePolicy, Measurement};
+use super::prior::{self, Candidate, FormatChoice};
+
+/// How the selection was made.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChoiceSource {
+    /// Warm tuning cache — no model query, no measurement.
+    Cache,
+    /// Empirical top-k measurement refined the prior.
+    Measured,
+    /// Roofline prior alone (measurement disabled or impossible).
+    Prior,
+}
+
+/// Selection configuration.
+#[derive(Debug, Clone)]
+pub struct AutoConfig {
+    /// Device whose roofline model ranks the candidates. GEN12 is the
+    /// paper's newest Intel part and the repo's primary target.
+    pub device: Device,
+    /// Run the empirical refinement pass (false = trust the prior).
+    pub measure: bool,
+    /// Measurement warmup/reps/top-k.
+    pub policy: MeasurePolicy,
+    /// Tuning-cache file; `None` disables persistence.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        Self {
+            device: Device::Gen12,
+            measure: true,
+            policy: MeasurePolicy::default(),
+            cache_path: None,
+        }
+    }
+}
+
+impl AutoConfig {
+    /// Default config persisting to [`TuneCache::default_path`].
+    pub fn cached() -> Self {
+        Self {
+            cache_path: Some(TuneCache::default_path()),
+            ..Self::default()
+        }
+    }
+}
+
+/// What the tuner decided and why.
+#[derive(Debug, Clone)]
+pub struct AutoReport {
+    /// Extracted structural features.
+    pub features: Features,
+    /// Prior ranking, best-first (empty on a cache hit).
+    pub candidates: Vec<Candidate>,
+    /// Empirical measurements, fastest-first (empty unless measured).
+    pub measurements: Vec<Measurement>,
+    /// The winner.
+    pub chosen: FormatChoice,
+    /// How it won.
+    pub source: ChoiceSource,
+    /// Total SpMV applies spent measuring (0 on a cache hit or a
+    /// prior-only decision).
+    pub measure_applies: usize,
+}
+
+enum Inner<T> {
+    Csr(Csr<T>),
+    Coo(Coo<T>),
+    Ell(Ell<T>),
+    SellP(SellP<T>),
+    Hybrid(Hybrid<T>),
+}
+
+/// A sparse operator that picked its own storage format.
+pub struct AutoMatrix<T> {
+    exec: Arc<Executor>,
+    dim: Dim2,
+    inner: Inner<T>,
+    report: AutoReport,
+}
+
+impl<T: Value> AutoMatrix<T> {
+    /// Select with the default configuration (measured, GEN12 prior,
+    /// no persistence).
+    pub fn from_data(exec: Arc<Executor>, data: &MatrixData<T>) -> Result<Self> {
+        Self::with_config(exec, data, &AutoConfig::default())
+    }
+
+    /// Select with persistence at the default cache path.
+    pub fn from_data_cached(exec: Arc<Executor>, data: &MatrixData<T>) -> Result<Self> {
+        Self::with_config(exec, data, &AutoConfig::cached())
+    }
+
+    /// Full selection pipeline under an explicit configuration.
+    pub fn with_config(
+        exec: Arc<Executor>,
+        data: &MatrixData<T>,
+        cfg: &AutoConfig,
+    ) -> Result<Self> {
+        data.validate()?;
+        let features = Features::from_data(data);
+        let key = cache_key(
+            features.fingerprint(),
+            exec.name(),
+            cfg.device,
+            T::PRECISION,
+        );
+        let mut cache = match &cfg.cache_path {
+            Some(p) => TuneCache::load(p),
+            None => TuneCache::in_memory(),
+        };
+
+        if let Some(hit) = cache.get(&key) {
+            if prior::supported_on(&exec, hit.format) {
+                let inner = build_inner(exec.clone(), data, hit.format)?;
+                let report = AutoReport {
+                    features,
+                    candidates: Vec::new(),
+                    measurements: Vec::new(),
+                    chosen: hit.format,
+                    source: ChoiceSource::Cache,
+                    measure_applies: 0,
+                };
+                return Ok(Self {
+                    exec,
+                    dim: data.dim,
+                    inner,
+                    report,
+                });
+            }
+        }
+
+        let candidates = prior::rank(&features, &exec, cfg.device, T::PRECISION);
+        debug_assert!(!candidates.is_empty(), "CSR is always a candidate");
+
+        let (chosen, source, measurements, us) = if cfg.measure && candidates.len() > 1 {
+            let top: Vec<FormatChoice> = candidates
+                .iter()
+                .take(cfg.policy.top_k.max(1))
+                .map(|c| c.format)
+                .collect();
+            let ms = measure_formats(&exec, data, &top, cfg.policy);
+            match ms.first() {
+                Some(best) => {
+                    let us = best.median_us();
+                    (best.format, ChoiceSource::Measured, ms, us)
+                }
+                // nothing could apply (ported backend without
+                // artifacts): fall back to the prior so construction
+                // still succeeds and apply reports the real error
+                None => (
+                    candidates[0].format,
+                    ChoiceSource::Prior,
+                    ms,
+                    candidates[0].predicted_us,
+                ),
+            }
+        } else {
+            (
+                candidates[0].format,
+                ChoiceSource::Prior,
+                Vec::new(),
+                candidates[0].predicted_us,
+            )
+        };
+
+        if source == ChoiceSource::Measured {
+            cache.put(
+                key,
+                CacheEntry {
+                    format: chosen,
+                    us_per_apply: us,
+                },
+            );
+            // persistence is best-effort: an unwritable cache directory
+            // must not fail matrix construction
+            let _ = cache.save();
+        }
+
+        let measure_applies = measurements.iter().map(|m| m.applies).sum();
+        let inner = build_inner(exec.clone(), data, chosen)?;
+        Ok(Self {
+            exec,
+            dim: data.dim,
+            inner,
+            report: AutoReport {
+                features,
+                candidates,
+                measurements,
+                chosen,
+                source,
+                measure_applies,
+            },
+        })
+    }
+
+    /// The selected format.
+    pub fn chosen_format(&self) -> FormatChoice {
+        self.report.chosen
+    }
+
+    /// Full selection report.
+    pub fn report(&self) -> &AutoReport {
+        &self.report
+    }
+
+    /// Stored nonzeros of the wrapped format.
+    pub fn nnz(&self) -> usize {
+        match &self.inner {
+            Inner::Csr(m) => m.nnz(),
+            Inner::Coo(m) => m.nnz(),
+            Inner::Ell(m) => m.nnz(),
+            Inner::SellP(m) => m.nnz(),
+            Inner::Hybrid(m) => m.nnz(),
+        }
+    }
+
+    fn as_linop(&self) -> &dyn LinOp<T> {
+        match &self.inner {
+            Inner::Csr(m) => m,
+            Inner::Coo(m) => m,
+            Inner::Ell(m) => m,
+            Inner::SellP(m) => m,
+            Inner::Hybrid(m) => m,
+        }
+    }
+}
+
+fn build_inner<T: Value>(
+    exec: Arc<Executor>,
+    data: &MatrixData<T>,
+    format: FormatChoice,
+) -> Result<Inner<T>> {
+    Ok(match format {
+        FormatChoice::Csr => Inner::Csr(Csr::from_data(exec, data)?),
+        FormatChoice::Coo => Inner::Coo(Coo::from_data(exec, data)?),
+        FormatChoice::Ell => Inner::Ell(Ell::from_data(exec, data)?),
+        FormatChoice::SellP => Inner::SellP(SellP::from_data(exec, data)?),
+        FormatChoice::Hybrid => Inner::Hybrid(Hybrid::from_data(exec, data)?),
+    })
+}
+
+impl<T: Value> LinOp<T> for AutoMatrix<T> {
+    fn shape(&self) -> Dim2 {
+        self.dim
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        self.as_linop().apply(b, x)
+    }
+
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.as_linop().apply_advanced(alpha, b, beta, x)
+    }
+
+    fn op_name(&self) -> &'static str {
+        "auto"
+    }
+}
+
+impl<T: Value> std::fmt::Debug for AutoMatrix<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "AutoMatrix<{}>({}, chosen={}, source={:?})",
+            T::PRECISION,
+            self.dim,
+            self.report.chosen,
+            self.report.source
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{assert_close, gen_sparse, gen_vec};
+
+    #[test]
+    fn auto_matches_csr_numerics() {
+        let mut rng = Prng::new(21);
+        let exec = Executor::par_with_threads(2);
+        for _ in 0..3 {
+            let n = 50 + rng.below(50);
+            let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+            let bv = gen_vec::<f64>(&mut rng, n);
+            let auto = AutoMatrix::from_data(exec.clone(), &data).unwrap();
+            let csr = Csr::from_data(exec.clone(), &data).unwrap();
+            let b = Dense::vector(exec.clone(), &bv);
+            let mut xa = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            auto.apply(&b, &mut xa).unwrap();
+            csr.apply(&b, &mut xc).unwrap();
+            assert_close(xa.as_slice(), xc.as_slice(), 1e-12, "auto apply");
+
+            auto.apply_advanced(1.5, &b, -0.5, &mut xa).unwrap();
+            csr.apply_advanced(1.5, &b, -0.5, &mut xc).unwrap();
+            assert_close(xa.as_slice(), xc.as_slice(), 1e-12, "auto advanced");
+        }
+    }
+
+    #[test]
+    fn prior_only_config_runs_zero_applies() {
+        let mut rng = Prng::new(22);
+        let data = gen_sparse::<f64>(&mut rng, 40, 40, 4);
+        let cfg = AutoConfig {
+            measure: false,
+            ..AutoConfig::default()
+        };
+        let auto = AutoMatrix::with_config(Executor::reference(), &data, &cfg).unwrap();
+        assert_eq!(auto.report().source, ChoiceSource::Prior);
+        assert_eq!(auto.report().measure_applies, 0);
+        assert!(auto.report().candidates.len() > 1);
+    }
+
+    #[test]
+    fn measured_config_reports_applies() {
+        let mut rng = Prng::new(23);
+        let data = gen_sparse::<f64>(&mut rng, 40, 40, 4);
+        let auto = AutoMatrix::from_data(Executor::reference(), &data).unwrap();
+        assert_eq!(auto.report().source, ChoiceSource::Measured);
+        assert!(auto.report().measure_applies > 0);
+        assert_eq!(
+            auto.chosen_format(),
+            auto.report().measurements[0].format
+        );
+    }
+}

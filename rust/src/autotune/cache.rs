@@ -1,0 +1,358 @@
+//! Persistent tuning cache.
+//!
+//! Tuning costs real SpMV applies, so decisions are persisted across
+//! runs in a small hand-rolled JSON file (the offline vendor set has no
+//! serde). The file is versioned; a missing, corrupt or
+//! version-mismatched file degrades to an empty cache — re-tuning is
+//! always correct, only slower. Keys combine the structural feature
+//! fingerprint with the executor name, modeled device and precision, so
+//! a cache is shared safely between programs tuning different matrices
+//! on different backends.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::core::error::Result;
+use crate::core::types::Precision;
+use crate::perfmodel::Device;
+
+use super::prior::FormatChoice;
+
+/// Cache file format version; bump when the entry schema changes.
+pub const CACHE_VERSION: u32 = 1;
+
+/// One cached tuning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// The winning format.
+    pub format: FormatChoice,
+    /// Its measured (or predicted, if measurement was disabled)
+    /// per-apply time, microseconds.
+    pub us_per_apply: f64,
+}
+
+/// Build the cache key for one (matrix, backend, device, precision).
+pub fn cache_key(fingerprint: u64, exec_name: &str, device: Device, p: Precision) -> String {
+    format!(
+        "{fingerprint:016x}/{exec_name}/{}/{}",
+        device.spec().name,
+        p.name()
+    )
+}
+
+/// The on-disk tuning cache.
+#[derive(Debug, Default)]
+pub struct TuneCache {
+    path: Option<PathBuf>,
+    entries: HashMap<String, CacheEntry>,
+}
+
+impl TuneCache {
+    /// A cache that never touches disk (tests, one-shot programs).
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    /// Load from `path`; missing, unreadable, corrupt or
+    /// version-mismatched files yield an empty cache bound to the same
+    /// path (the next `save` rewrites it wholesale).
+    pub fn load(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref().to_path_buf();
+        let entries = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| parse_cache_json(&text))
+            .unwrap_or_default();
+        Self {
+            path: Some(path),
+            entries,
+        }
+    }
+
+    /// Default cache location: `$SPARKLE_TUNE_CACHE` or
+    /// `.sparkle_tune.json` in the working directory.
+    pub fn default_path() -> PathBuf {
+        std::env::var_os("SPARKLE_TUNE_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(".sparkle_tune.json"))
+    }
+
+    /// Look up a decision.
+    pub fn get(&self, key: &str) -> Option<&CacheEntry> {
+        self.entries.get(key)
+    }
+
+    /// Record a decision (in memory; call [`TuneCache::save`] to persist).
+    pub fn put(&mut self, key: String, entry: CacheEntry) {
+        self.entries.insert(key, entry);
+    }
+
+    /// Number of cached decisions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds no decisions.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Write the cache back to its path (no-op for in-memory caches).
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let mut keys: Vec<&String> = self.entries.keys().collect();
+        keys.sort(); // deterministic file content
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"version\": {CACHE_VERSION},\n"));
+        out.push_str("  \"entries\": [\n");
+        for (i, key) in keys.iter().enumerate() {
+            let e = &self.entries[*key];
+            out.push_str(&format!(
+                "    {{\"key\": \"{}\", \"format\": \"{}\", \"us\": {}}}{}\n",
+                escape_json(key),
+                e.format.name(),
+                e.us_per_apply,
+                if i + 1 < keys.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Parse the cache JSON. Returns `None` on any structural anomaly —
+/// the caller treats that as an empty cache.
+fn parse_cache_json(text: &str) -> Option<HashMap<String, CacheEntry>> {
+    let version = json_u32_field(text, "version")?;
+    if version != CACHE_VERSION {
+        return None;
+    }
+    let start = text.find("\"entries\"")?;
+    let open = text[start..].find('[')? + start;
+    let close = matching_bracket(text, open, '[', ']')?;
+    let body = &text[open + 1..close];
+    let mut entries = HashMap::new();
+    let mut pos = 0;
+    while let Some(rel) = body[pos..].find('{') {
+        let obj_open = pos + rel;
+        let obj_close = matching_bracket(body, obj_open, '{', '}')?;
+        let obj = &body[obj_open..=obj_close];
+        let key = json_str_field(obj, "key")?;
+        let format = FormatChoice::parse(&json_str_field(obj, "format")?)?;
+        let us = json_f64_field(obj, "us")?;
+        if !us.is_finite() || us < 0.0 {
+            return None;
+        }
+        entries.insert(
+            key,
+            CacheEntry {
+                format,
+                us_per_apply: us,
+            },
+        );
+        pos = obj_close + 1;
+    }
+    Some(entries)
+}
+
+/// Index of the bracket matching `text[open]` (which must be `ob`),
+/// ignoring brackets inside string literals.
+fn matching_bracket(text: &str, open: usize, ob: char, cb: char) -> Option<usize> {
+    let bytes = text.as_bytes();
+    if bytes.get(open) != Some(&(ob as u8)) {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        let c = b as char;
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        if c == '"' {
+            in_str = true;
+        } else if c == ob {
+            depth += 1;
+        } else if c == cb {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Value of `"name": "..."` inside `obj` (unescapes \" \\ \uXXXX).
+fn json_str_field(obj: &str, name: &str) -> Option<String> {
+    let tail = field_tail(obj, name)?;
+    let tail = tail.strip_prefix('"')?;
+    let mut out = String::new();
+    let mut chars = tail.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+fn json_f64_field(obj: &str, name: &str) -> Option<f64> {
+    let tail = field_tail(obj, name)?;
+    let end = tail
+        .find(|c: char| !matches!(c, '0'..='9' | '.' | '-' | '+' | 'e' | 'E'))
+        .unwrap_or(tail.len());
+    tail[..end].parse().ok()
+}
+
+fn json_u32_field(obj: &str, name: &str) -> Option<u32> {
+    json_f64_field(obj, name).and_then(|v| {
+        if v >= 0.0 && v.fract() == 0.0 {
+            Some(v as u32)
+        } else {
+            None
+        }
+    })
+}
+
+/// Slice of `obj` immediately after `"name":` with whitespace skipped.
+fn field_tail<'a>(obj: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\"");
+    let at = obj.find(&pat)? + pat.len();
+    let rest = obj[at..].trim_start();
+    let rest = rest.strip_prefix(':')?;
+    Some(rest.trim_start())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sparkle_cache_test_{}_{tag}.json", std::process::id()))
+    }
+
+    fn sample_entry() -> CacheEntry {
+        CacheEntry {
+            format: FormatChoice::Ell,
+            us_per_apply: 12.75,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_disk() {
+        let path = tmp_path("round_trip");
+        let mut c = TuneCache::load(&path);
+        assert!(c.is_empty());
+        c.put("abc/par/GEN12/f64".into(), sample_entry());
+        c.put(
+            "def/reference/GEN9/f32".into(),
+            CacheEntry {
+                format: FormatChoice::Csr,
+                us_per_apply: 0.5,
+            },
+        );
+        c.save().unwrap();
+        let r = TuneCache::load(&path);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("abc/par/GEN12/f64"), Some(&sample_entry()));
+        assert_eq!(
+            r.get("def/reference/GEN9/f32").unwrap().format,
+            FormatChoice::Csr
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_and_missing_files_degrade_to_empty() {
+        let missing = TuneCache::load(tmp_path("missing_never_written"));
+        assert!(missing.is_empty());
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{\"version\": 1, \"entries\": [{\"key\": \"trunc").unwrap();
+        assert!(TuneCache::load(&path).is_empty());
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(TuneCache::load(&path).is_empty());
+        // wrong version: ignored wholesale
+        std::fs::write(
+            &path,
+            "{\"version\": 99, \"entries\": [{\"key\": \"k\", \"format\": \"csr\", \"us\": 1}]}",
+        )
+        .unwrap();
+        assert!(TuneCache::load(&path).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_unknown_format_and_bad_numbers() {
+        assert!(parse_cache_json(
+            "{\"version\": 1, \"entries\": [{\"key\": \"k\", \"format\": \"bsr\", \"us\": 1}]}"
+        )
+        .is_none());
+        assert!(parse_cache_json(
+            "{\"version\": 1, \"entries\": [{\"key\": \"k\", \"format\": \"csr\", \"us\": -3}]}"
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn keys_with_escapes_survive() {
+        let path = tmp_path("escapes");
+        let mut c = TuneCache::load(&path);
+        c.put("weird\"key\\with/stuff".into(), sample_entry());
+        c.save().unwrap();
+        let r = TuneCache::load(&path);
+        assert_eq!(r.get("weird\"key\\with/stuff"), Some(&sample_entry()));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_key_is_stable_and_discriminating() {
+        let a = cache_key(0xABCD, "par", Device::Gen12, Precision::Double);
+        let b = cache_key(0xABCD, "par", Device::Gen12, Precision::Single);
+        let c = cache_key(0xABCD, "reference", Device::Gen12, Precision::Double);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert!(a.starts_with("000000000000abcd/par/"));
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let mut c = TuneCache::in_memory();
+        c.put("k".into(), sample_entry());
+        c.save().unwrap();
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Sparsity-feature extraction.
+//!
+//! Everything the selection prior conditions on is derived from the
+//! row-length distribution and the column-access locality — the two
+//! structural axes the paper's format study varies (§6.3). Extraction
+//! is a single pass over the entries, cheap enough to run at every
+//! matrix construction.
+
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::matgen::MatrixStats;
+use crate::matrix::csr::Csr;
+
+/// Structural features of a sparse matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Features {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Stored nonzeros (after duplicate summation).
+    pub nnz: usize,
+    /// Mean nonzeros per row.
+    pub avg_row: f64,
+    /// Longest row.
+    pub max_row: usize,
+    /// Variance of row lengths.
+    pub row_var: f64,
+    /// Coefficient of variation of row lengths (0 = perfectly regular).
+    pub row_cv: f64,
+    /// Rows with no stored entry (spoilers for row-parallel kernels).
+    pub empty_rows: usize,
+    /// Mean |col - row| normalized by n — gather-locality proxy,
+    /// matching [`MatrixStats::bandwidth_frac`].
+    pub bandwidth_frac: f64,
+    /// `rows * max_row / nnz`: the storage blow-up ELL would pay
+    /// (1.0 = perfectly regular; large = ELL is hopeless).
+    pub ell_padding_ratio: f64,
+}
+
+impl Features {
+    /// Extract from assembly data. Unnormalized data (duplicates,
+    /// unsorted) is normalized on a copy first so `nnz` and row lengths
+    /// describe what a format would actually store.
+    pub fn from_data<T: Value>(data: &MatrixData<T>) -> Self {
+        if data.is_normalized() {
+            Self::from_normalized(data)
+        } else {
+            let mut d = data.clone();
+            d.normalize();
+            Self::from_normalized(&d)
+        }
+    }
+
+    fn from_normalized<T: Value>(data: &MatrixData<T>) -> Self {
+        let lens = data.row_lengths();
+        let dist_sum: f64 = data
+            .entries
+            .iter()
+            .map(|e| (e.row - e.col).abs() as f64)
+            .sum();
+        Self::from_parts(data.dim.rows, data.dim.cols, &lens, dist_sum)
+    }
+
+    /// Extract from an already-built CSR matrix (no assembly data
+    /// round-trip; used when tuning an existing operator).
+    pub fn from_csr<T: Value>(a: &Csr<T>) -> Self {
+        let rows = a.shape().rows;
+        let lens: Vec<usize> = (0..rows).map(|i| a.row_len(i)).collect();
+        let mut dist_sum = 0.0;
+        for i in 0..rows {
+            let lo = a.row_ptrs()[i] as usize;
+            let hi = a.row_ptrs()[i + 1] as usize;
+            for &c in &a.col_idxs()[lo..hi] {
+                dist_sum += (c as i64 - i as i64).abs() as f64;
+            }
+        }
+        Self::from_parts(rows, a.shape().cols, &lens, dist_sum)
+    }
+
+    fn from_parts(rows: usize, cols: usize, lens: &[usize], dist_sum: f64) -> Self {
+        let nnz: usize = lens.iter().sum();
+        let n = rows.max(1);
+        let avg = nnz as f64 / n as f64;
+        let var = lens
+            .iter()
+            .map(|&l| (l as f64 - avg) * (l as f64 - avg))
+            .sum::<f64>()
+            / n as f64;
+        let max_row = lens.iter().copied().max().unwrap_or(0);
+        let empty_rows = lens.iter().filter(|&&l| l == 0).count();
+        Self {
+            rows,
+            cols,
+            nnz,
+            avg_row: avg,
+            max_row,
+            row_var: var,
+            row_cv: if avg > 0.0 { var.sqrt() / avg } else { 0.0 },
+            empty_rows,
+            bandwidth_frac: if nnz == 0 {
+                0.0
+            } else {
+                dist_sum / nnz as f64 / n as f64
+            },
+            ell_padding_ratio: if nnz == 0 {
+                1.0
+            } else {
+                (rows * max_row) as f64 / nnz as f64
+            },
+        }
+    }
+
+    /// Bridge to the perf model's statistics type.
+    pub fn to_stats(&self) -> MatrixStats {
+        MatrixStats {
+            n: self.rows,
+            nnz: self.nnz,
+            avg_row: self.avg_row,
+            max_row: self.max_row,
+            row_cv: self.row_cv,
+            bandwidth_frac: self.bandwidth_frac,
+        }
+    }
+
+    /// Deterministic fingerprint for the tuning cache. Continuous
+    /// features are quantized (1e-3) so numerically-identical rebuilds
+    /// of the same structure hash equal, while different structures
+    /// collide no more often than the mixer allows.
+    pub fn fingerprint(&self) -> u64 {
+        let q = |v: f64| (v * 1e3).round() as i64 as u64;
+        let mut h = 0xcbf29ce484222325u64;
+        for field in [
+            self.rows as u64,
+            self.cols as u64,
+            self.nnz as u64,
+            self.max_row as u64,
+            self.empty_rows as u64,
+            q(self.avg_row),
+            q(self.row_cv),
+            q(self.bandwidth_frac),
+            q(self.ell_padding_ratio),
+        ] {
+            h ^= field;
+            // splitmix64 finalizer as the mixing round
+            h = h.wrapping_add(0x9E3779B97F4A7C15);
+            h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+            h ^= h >> 31;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+    use crate::core::executor::Executor;
+
+    #[test]
+    fn diagonal_matrix_is_perfectly_regular() {
+        let n = 16;
+        let mut d = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            d.push(i as i32, i as i32, 1.0 + i as f64);
+        }
+        d.normalize();
+        let f = Features::from_data(&d);
+        assert_eq!((f.rows, f.cols, f.nnz), (n, n, n));
+        assert_eq!(f.max_row, 1);
+        assert_eq!(f.empty_rows, 0);
+        assert_eq!(f.row_cv, 0.0);
+        assert_eq!(f.bandwidth_frac, 0.0);
+        assert_eq!(f.ell_padding_ratio, 1.0);
+    }
+
+    #[test]
+    fn empty_rows_counted() {
+        // entries only in rows 0 and 3 of a 6-row matrix
+        let mut d = MatrixData::<f64>::new(Dim2::new(6, 6));
+        d.push(0, 1, 1.0);
+        d.push(0, 2, 1.0);
+        d.push(3, 0, 1.0);
+        d.normalize();
+        let f = Features::from_data(&d);
+        assert_eq!(f.nnz, 3);
+        assert_eq!(f.empty_rows, 4);
+        assert_eq!(f.max_row, 2);
+        assert!(f.row_cv > 0.0);
+    }
+
+    #[test]
+    fn single_dense_row_blows_up_padding() {
+        // one full row, everyone else diagonal: ELL pads n*n slots
+        let n = 32;
+        let mut d = MatrixData::<f64>::new(Dim2::square(n));
+        for j in 0..n {
+            d.push(0, j as i32, 1.0);
+        }
+        for i in 1..n {
+            d.push(i as i32, i as i32, 2.0);
+        }
+        d.normalize();
+        let f = Features::from_data(&d);
+        assert_eq!(f.max_row, n);
+        assert_eq!(f.nnz, 2 * n - 1);
+        let expect = (n * n) as f64 / (2 * n - 1) as f64;
+        assert!((f.ell_padding_ratio - expect).abs() < 1e-12);
+        assert!(f.row_cv > 1.0, "skew must register, cv={}", f.row_cv);
+    }
+
+    #[test]
+    fn wholly_empty_matrix_is_finite() {
+        let d = MatrixData::<f64>::new(Dim2::new(8, 8));
+        let f = Features::from_data(&d);
+        assert_eq!(f.nnz, 0);
+        assert_eq!(f.empty_rows, 8);
+        assert_eq!(f.avg_row, 0.0);
+        assert_eq!(f.row_cv, 0.0);
+        assert_eq!(f.ell_padding_ratio, 1.0);
+        assert!(f.fingerprint() != 0);
+    }
+
+    #[test]
+    fn csr_and_data_paths_agree() {
+        let mut rng = crate::testing::prng::Prng::new(17);
+        let d = crate::testing::prop::gen_sparse::<f64>(&mut rng, 60, 60, 6);
+        let csr = Csr::from_data(Executor::reference(), &d).unwrap();
+        let fa = Features::from_data(&d);
+        let fb = Features::from_csr(&csr);
+        assert_eq!(fa, fb);
+        assert_eq!(fa.fingerprint(), fb.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structures() {
+        let mut a = MatrixData::<f64>::new(Dim2::square(10));
+        let mut b = MatrixData::<f64>::new(Dim2::square(10));
+        for i in 0..10 {
+            a.push(i, i, 1.0);
+            b.push(i, (9 - i) as i32, 1.0);
+        }
+        a.normalize();
+        b.normalize();
+        let (fa, fb) = (Features::from_data(&a), Features::from_data(&b));
+        // same row stats, different locality -> different fingerprint
+        assert_ne!(fa.fingerprint(), fb.fingerprint());
+    }
+}

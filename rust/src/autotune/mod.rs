@@ -1,0 +1,32 @@
+//! Automatic sparse-format selection (the library picks, not the user).
+//!
+//! The paper's central empirical result is that no single format wins
+//! across matrices and devices — SpMV on GEN9/GEN12 swings by large
+//! factors between CSR, COO, ELL and hybrid depending on sparsity
+//! structure (§6.3), which is why Ginkgo ships a format zoo at all.
+//! This subsystem closes the loop the paper leaves to the user:
+//!
+//! 1. [`features`] extracts cheap structural statistics from assembly
+//!    data (row-length moments, imbalance, locality, padding ratio);
+//! 2. [`prior`] ranks the candidate formats with the calibrated
+//!    roofline/traffic model from `perfmodel` — no kernel is run;
+//! 3. [`measure`] refines the top of the ranking by timing real SpMV
+//!    applies through `bench_util`'s timer;
+//! 4. [`cache`] persists the decision on disk keyed by a feature
+//!    fingerprint, so repeated runs skip re-tuning entirely;
+//! 5. [`auto`] wraps the winner in [`AutoMatrix`], a drop-in [`LinOp`]
+//!    for every solver in `solver/`.
+//!
+//! [`LinOp`]: crate::core::linop::LinOp
+
+pub mod auto;
+pub mod cache;
+pub mod features;
+pub mod measure;
+pub mod prior;
+
+pub use auto::{AutoConfig, AutoMatrix, AutoReport, ChoiceSource};
+pub use cache::{cache_key, CacheEntry, TuneCache};
+pub use features::Features;
+pub use measure::{Measurement, MeasurePolicy};
+pub use prior::{rank, Candidate, FormatChoice};

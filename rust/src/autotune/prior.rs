@@ -1,0 +1,244 @@
+//! Model-based format ranking (no kernel is run).
+//!
+//! Each candidate format is scored with the calibrated roofline/traffic
+//! model from `perfmodel`: predicted bytes moved and flops give a
+//! predicted time, and candidates are ranked ascending. The prior's job
+//! is not to be exactly right — it is to put the true winner inside the
+//! top-k that [`crate::autotune::measure`] then times for real, and to
+//! exclude formats that are structurally hopeless (ELL on a power-law
+//! matrix) before they allocate.
+
+use crate::core::executor::Executor;
+use crate::core::types::Precision;
+use crate::perfmodel::{project_spmv, Device, SpmvKernelKind};
+use crate::perfmodel::project::Implementation;
+
+use super::features::Features;
+
+/// The five storage formats the library can select between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatChoice {
+    Csr,
+    Coo,
+    Ell,
+    SellP,
+    Hybrid,
+}
+
+impl FormatChoice {
+    /// Every format, in selection-priority order for ties.
+    pub const ALL: [FormatChoice; 5] = [
+        FormatChoice::Csr,
+        FormatChoice::Coo,
+        FormatChoice::Ell,
+        FormatChoice::SellP,
+        FormatChoice::Hybrid,
+    ];
+
+    /// Stable lowercase name (used by the cache serialization).
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatChoice::Csr => "csr",
+            FormatChoice::Coo => "coo",
+            FormatChoice::Ell => "ell",
+            FormatChoice::SellP => "sellp",
+            FormatChoice::Hybrid => "hybrid",
+        }
+    }
+
+    /// Inverse of [`FormatChoice::name`].
+    pub fn parse(s: &str) -> Option<FormatChoice> {
+        FormatChoice::ALL.iter().copied().find(|f| f.name() == s)
+    }
+}
+
+impl std::fmt::Display for FormatChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One ranked candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub format: FormatChoice,
+    /// Model-predicted time for one SpMV, microseconds.
+    pub predicted_us: f64,
+    /// Model-predicted throughput.
+    pub predicted_gflops: f64,
+}
+
+/// ELL storage blow-up cap: beyond this padding ratio (or an absolute
+/// padded-entry count) the format is excluded outright, matching the
+/// guards the format benches use.
+const ELL_MAX_PADDING: f64 = 8.0;
+const ELL_MAX_STORED: usize = 64_000_000;
+
+/// Whether the executor can apply the format at all.
+pub fn supported_on(exec: &Executor, format: FormatChoice) -> bool {
+    match (exec, format) {
+        // no SELL-P artifact on the ported backend (kernels::spmv)
+        (Executor::Xla(_), FormatChoice::SellP) => false,
+        _ => true,
+    }
+}
+
+/// Whether ELL storage is even worth constructing for this structure.
+pub fn ell_is_viable(feats: &Features) -> bool {
+    feats.ell_padding_ratio <= ELL_MAX_PADDING
+        && feats.rows.saturating_mul(feats.max_row) <= ELL_MAX_STORED
+}
+
+/// Rank all candidate formats for `feats` on `exec`, modeled on
+/// `device`, best (lowest predicted time) first. Never empty: CSR is
+/// always a candidate.
+pub fn rank(
+    feats: &Features,
+    exec: &Executor,
+    device: Device,
+    p: Precision,
+) -> Vec<Candidate> {
+    let stats = feats.to_stats();
+    let mut out: Vec<Candidate> = Vec::with_capacity(FormatChoice::ALL.len());
+
+    let project = |kind: SpmvKernelKind, stats: &crate::matgen::MatrixStats| {
+        project_spmv(device, Implementation::Sparkle, kind, stats, p)
+    };
+
+    for format in FormatChoice::ALL {
+        if !supported_on(exec, format) {
+            continue;
+        }
+        let (predicted_us, predicted_gflops) = match format {
+            FormatChoice::Csr => {
+                let pr = project(SpmvKernelKind::Csr, &stats);
+                (pr.time_us, pr.gflops)
+            }
+            FormatChoice::Coo => {
+                let pr = project(SpmvKernelKind::Coo, &stats);
+                (pr.time_us, pr.gflops)
+            }
+            FormatChoice::SellP => {
+                let pr = project(SpmvKernelKind::SellP, &stats);
+                (pr.time_us, pr.gflops)
+            }
+            FormatChoice::Ell => {
+                if !ell_is_viable(feats) {
+                    continue;
+                }
+                let pr = project(SpmvKernelKind::Ell, &stats);
+                (pr.time_us, pr.gflops)
+            }
+            FormatChoice::Hybrid => {
+                // Split model: the ELL part holds the regular core at
+                // width ≈ avg_row with near-zero padding; the COO part
+                // absorbs the imbalanced spill. Spill mass grows with
+                // row-length skew (cv); for regular matrices it vanishes
+                // and hybrid degenerates to ELL + an extra launch.
+                let spill_frac =
+                    (0.5 * feats.row_cv / (1.0 + feats.row_cv)).clamp(0.0, 0.5);
+                let w = feats.avg_row.ceil().max(1.0) as usize;
+                let ell_nnz =
+                    ((feats.nnz as f64) * (1.0 - spill_frac)).round() as usize;
+                let coo_nnz = feats.nnz - ell_nnz.min(feats.nnz);
+                let mut ell_stats = stats.clone();
+                ell_stats.max_row = w;
+                ell_stats.nnz = ell_nnz.max(1);
+                ell_stats.avg_row = ell_stats.nnz as f64 / feats.rows.max(1) as f64;
+                ell_stats.row_cv = 0.0;
+                let pe = project(SpmvKernelKind::Ell, &ell_stats);
+                let mut t_us = pe.time_us;
+                let mut flops = 2.0 * ell_stats.nnz as f64;
+                if coo_nnz > 0 {
+                    let mut coo_stats = stats.clone();
+                    coo_stats.nnz = coo_nnz;
+                    coo_stats.avg_row = coo_nnz as f64 / feats.rows.max(1) as f64;
+                    let pc = project(SpmvKernelKind::Coo, &coo_stats);
+                    t_us += pc.time_us;
+                    flops += 2.0 * coo_nnz as f64;
+                }
+                (t_us, flops / (t_us * 1e3))
+            }
+        };
+        out.push(Candidate {
+            format,
+            predicted_us,
+            predicted_gflops,
+        });
+    }
+
+    out.sort_by(|a, b| {
+        a.predicted_us
+            .partial_cmp(&b.predicted_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+    use crate::core::matrix_data::MatrixData;
+
+    fn feats_of(d: &MatrixData<f64>) -> Features {
+        Features::from_data(d)
+    }
+
+    #[test]
+    fn ell_excluded_on_power_law_rows() {
+        let n = 64;
+        let mut d = MatrixData::<f64>::new(Dim2::square(n));
+        for j in 0..n {
+            d.push(0, j as i32, 1.0);
+        }
+        for i in 1..n {
+            d.push(i as i32, i as i32, 2.0);
+        }
+        d.normalize();
+        let f = feats_of(&d);
+        assert!(!ell_is_viable(&f), "padding ratio {}", f.ell_padding_ratio);
+        let ranked = rank(&f, &Executor::par(), Device::Gen12, Precision::Double);
+        assert!(ranked.iter().all(|c| c.format != FormatChoice::Ell));
+        assert!(ranked.iter().any(|c| c.format == FormatChoice::Csr));
+    }
+
+    #[test]
+    fn regular_matrix_ranks_simd_formats_high() {
+        // 5-point-stencil-like regular structure
+        let n = 1024;
+        let mut d = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n as i32 {
+            for dj in [-1i32, 0, 1] {
+                let j = i + dj;
+                if (0..n as i32).contains(&j) {
+                    d.push(i, j, 1.0);
+                }
+            }
+        }
+        d.normalize();
+        let f = feats_of(&d);
+        let ranked = rank(&f, &Executor::par(), Device::Gen12, Precision::Double);
+        assert!(!ranked.is_empty());
+        assert!(ranked.windows(2).all(|w| w[0].predicted_us <= w[1].predicted_us));
+        // ELL must be viable and competitive on a near-regular structure
+        assert!(ranked
+            .iter()
+            .take(3)
+            .any(|c| matches!(c.format, FormatChoice::Ell | FormatChoice::SellP)));
+    }
+
+    #[test]
+    fn xla_executor_excludes_sellp() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(8));
+        for i in 0..8 {
+            d.push(i, i, 1.0);
+        }
+        d.normalize();
+        let f = feats_of(&d);
+        // artifacts dir may be absent; Executor::xla still constructs
+        let exec = Executor::xla("artifacts_nonexistent_for_test").unwrap();
+        let ranked = rank(&f, &exec, Device::Gen9, Precision::Single);
+        assert!(ranked.iter().all(|c| c.format != FormatChoice::SellP));
+    }
+}

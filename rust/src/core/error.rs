@@ -4,39 +4,76 @@
 ///
 /// Mirrors Ginkgo's exception hierarchy (`DimensionMismatch`,
 /// `NotSupported`, `KernelNotFound`, ...) flattened into one enum.
-#[derive(Debug, thiserror::Error)]
+/// `Display`/`Error`/`From` are hand-implemented below — the offline
+/// vendor set carries no proc-macro crates.
+#[derive(Debug)]
 pub enum SparkleError {
     /// Operand dimensions do not conform (e.g. SpMV with wrong vector size).
-    #[error("dimension mismatch in {op}: {detail}")]
     DimensionMismatch { op: &'static str, detail: String },
 
     /// The requested kernel/operation is not implemented for this executor.
-    #[error("operation `{op}` is not supported on executor `{exec}`")]
     NotSupported { op: &'static str, exec: &'static str },
 
     /// Malformed sparse structure (unsorted, out-of-bounds index, ...).
-    #[error("invalid matrix structure: {0}")]
     InvalidStructure(String),
 
     /// Artifact missing / shape outside every bucket / PJRT failure.
-    #[error("xla runtime: {0}")]
     Runtime(String),
 
     /// I/O and parse failures (MatrixMarket, manifests).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Parse failure with location context.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Solver failed to meet its stopping criterion budget.
-    #[error("solver `{solver}` did not converge in {iters} iterations (residual {resnorm:.3e})")]
     NotConverged {
         solver: &'static str,
         iters: usize,
         resnorm: f64,
     },
+}
+
+impl std::fmt::Display for SparkleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SparkleError::DimensionMismatch { op, detail } => {
+                write!(f, "dimension mismatch in {op}: {detail}")
+            }
+            SparkleError::NotSupported { op, exec } => {
+                write!(f, "operation `{op}` is not supported on executor `{exec}`")
+            }
+            SparkleError::InvalidStructure(msg) => {
+                write!(f, "invalid matrix structure: {msg}")
+            }
+            SparkleError::Runtime(msg) => write!(f, "xla runtime: {msg}"),
+            SparkleError::Io(e) => write!(f, "io: {e}"),
+            SparkleError::Parse(msg) => write!(f, "parse error: {msg}"),
+            SparkleError::NotConverged {
+                solver,
+                iters,
+                resnorm,
+            } => write!(
+                f,
+                "solver `{solver}` did not converge in {iters} iterations (residual {resnorm:.3e})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SparkleError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SparkleError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SparkleError {
+    fn from(e: std::io::Error) -> Self {
+        SparkleError::Io(e)
+    }
 }
 
 /// Library-wide result alias.

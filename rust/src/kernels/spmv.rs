@@ -10,6 +10,7 @@ use crate::matrix::coo::Coo;
 use crate::matrix::csr::Csr;
 use crate::matrix::dense::Dense;
 use crate::matrix::ell::Ell;
+use crate::matrix::hybrid::Hybrid;
 use crate::matrix::sellp::SellP;
 
 /// x = A b (CSR).
@@ -125,6 +126,38 @@ pub fn sellp_apply<T: Value>(
     Ok(())
 }
 
+/// x = A b (Hybrid).
+pub fn hybrid_apply<T: Value>(
+    exec: &Arc<Executor>,
+    a: &Hybrid<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    // x = ell * b; x += coo * b — each part goes through its own
+    // per-executor switch, so every backend that has ELL + COO kernels
+    // (including xla) gets Hybrid for free.
+    ell_apply(exec, a.ell_part(), b, x)?;
+    coo_apply_advanced(exec, T::one(), a.coo_part(), T::one(), b, x)
+}
+
+/// x = alpha A b + beta x (Hybrid).
+pub fn hybrid_apply_advanced<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    a: &Hybrid<T>,
+    beta: T,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    if alpha == T::one() && beta == T::zero() {
+        return hybrid_apply(exec, a, b, x);
+    }
+    // compose: tmp = A b; x = alpha tmp + beta x
+    let mut tmp = Dense::zeros(exec.clone(), x.shape());
+    hybrid_apply(exec, a, b, &mut tmp)?;
+    crate::kernels::blas::axpby(exec, alpha, &tmp, beta, x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,7 +200,40 @@ mod tests {
                     crate::matrix::hybrid::Hybrid::from_data(exec.clone(), &data).unwrap();
                 hybrid.apply(&b, &mut x).unwrap();
                 assert_close(x.as_slice(), expect.as_slice(), 1e-12, "hybrid");
+
+                // the dispatch entry point and the LinOp path must agree
+                let mut xd = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+                hybrid_apply(&exec, &hybrid, &b, &mut xd).unwrap();
+                assert_close(xd.as_slice(), expect.as_slice(), 1e-12, "hybrid_apply");
             }
+        }
+    }
+
+    /// `hybrid_apply_advanced` must match the CSR advanced kernel.
+    #[test]
+    fn hybrid_advanced_matches_csr() {
+        let mut rng = Prng::new(77);
+        let n = 64;
+        let data = gen_sparse::<f64>(&mut rng, n, n, 6);
+        let bv = gen_vec::<f64>(&mut rng, n);
+        let x0 = gen_vec::<f64>(&mut rng, n);
+        for exec in [Executor::reference(), Executor::par_with_threads(2)] {
+            let b = Dense::vector(exec.clone(), &bv);
+            let csr = Csr::from_data(exec.clone(), &data).unwrap();
+            let mut expect = Dense::vector(exec.clone(), &x0);
+            csr_apply_advanced(&exec, 2.5, &csr, -0.75, &b, &mut expect).unwrap();
+
+            let hybrid = crate::matrix::hybrid::Hybrid::from_data(exec.clone(), &data).unwrap();
+            let mut x = Dense::vector(exec.clone(), &x0);
+            hybrid_apply_advanced(&exec, 2.5, &hybrid, -0.75, &b, &mut x).unwrap();
+            assert_close(x.as_slice(), expect.as_slice(), 1e-12, "hybrid advanced");
+
+            // alpha=1, beta=0 fast path equals plain apply
+            let mut xa = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let mut xb = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            hybrid_apply(&exec, &hybrid, &b, &mut xa).unwrap();
+            hybrid_apply_advanced(&exec, 1.0, &hybrid, 0.0, &b, &mut xb).unwrap();
+            assert_close(xa.as_slice(), xb.as_slice(), 0.0, "fast path");
         }
     }
 }

@@ -10,6 +10,9 @@
 //!   oracle), `par` (multithreaded host), `xla` (AOT JAX/Pallas HLO via
 //!   PJRT — the analog of the paper's new DPC++ backend).
 //! * **runtime** — PJRT artifact loading, shape buckets, manifest.
+//! * **autotune** — adaptive format selection: sparsity features, a
+//!   roofline prior, empirical top-k measurement and a persistent
+//!   tuning cache behind the drop-in [`AutoMatrix`] operator.
 //! * **perfmodel** — calibrated roofline models of the paper's GPUs
 //!   (GEN9, GEN12, V100, RadeonVII): the testbed substitute.
 //! * **matgen / io** — SuiteSparse-like synthetic matrices + MatrixMarket.
@@ -19,6 +22,7 @@
 //! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+pub mod autotune;
 pub mod bench_util;
 pub mod core;
 pub mod io;
@@ -33,6 +37,7 @@ pub mod stop;
 pub mod testing;
 pub mod vendor_mkl;
 
+pub use crate::autotune::AutoMatrix;
 pub use crate::core::dim::Dim2;
 pub use crate::core::error::{Result, SparkleError};
 pub use crate::core::executor::Executor;

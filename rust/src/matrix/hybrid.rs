@@ -142,16 +142,12 @@ impl<T: Value> LinOp<T> for Hybrid<T> {
 
     fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
         self.check_conformant(b, x)?;
-        // x = ell * b; x += coo * b
-        self.ell.apply(b, x)?;
-        crate::kernels::spmv::coo_apply_advanced(
-            &self.exec,
-            T::one(),
-            &self.coo,
-            T::one(),
-            b,
-            x,
-        )
+        crate::kernels::spmv::hybrid_apply(&self.exec, self, b, x)
+    }
+
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::hybrid_apply_advanced(&self.exec, alpha, self, beta, b, x)
     }
 
     fn op_name(&self) -> &'static str {

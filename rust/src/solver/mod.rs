@@ -84,6 +84,25 @@ pub trait Solver<T: Value> {
         x: &mut Dense<T>,
     ) -> Result<SolveResult>;
 
+    /// Solve directly from assembly data, letting the autotuner pick
+    /// the storage format ([`crate::autotune::AutoMatrix`]). The
+    /// operator is built, tuned and dropped within the call — use
+    /// [`AutoMatrix`](crate::autotune::AutoMatrix) directly to reuse it
+    /// across solves.
+    fn solve_data(
+        &self,
+        exec: &std::sync::Arc<crate::core::executor::Executor>,
+        data: &crate::core::matrix_data::MatrixData<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult>
+    where
+        Self: Sized,
+    {
+        let a = crate::autotune::AutoMatrix::from_data(exec.clone(), data)?;
+        self.solve(&a, b, x)
+    }
+
     /// Solver name for logs and benches.
     fn name(&self) -> &'static str;
 

@@ -1,0 +1,134 @@
+//! Integration tests for the autotune subsystem: cache-hit behaviour,
+//! graceful degradation, and the solver wire-up.
+
+use std::path::PathBuf;
+
+use sparkle::autotune::{AutoConfig, AutoMatrix, ChoiceSource, TuneCache};
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::matgen::stencil;
+use sparkle::solver::{Cg, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::testing::prng::Prng;
+use sparkle::testing::prop::{assert_close, gen_sparse, gen_vec};
+use sparkle::{Csr, Dense, Dim2};
+
+fn tmp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "sparkle_autotune_it_{}_{tag}.json",
+        std::process::id()
+    ))
+}
+
+/// Acceptance criterion: a second tuning run against a warm cache must
+/// perform zero measurement applies and land on the same format.
+#[test]
+fn warm_cache_second_run_measures_nothing() {
+    let path = tmp_cache("warm");
+    let _ = std::fs::remove_file(&path);
+    let mut rng = Prng::new(31);
+    let data = gen_sparse::<f64>(&mut rng, 150, 150, 6);
+    let exec = Executor::par_with_threads(2);
+    let cfg = AutoConfig {
+        cache_path: Some(path.clone()),
+        ..AutoConfig::default()
+    };
+
+    let cold = AutoMatrix::with_config(exec.clone(), &data, &cfg).unwrap();
+    assert_eq!(cold.report().source, ChoiceSource::Measured);
+    assert!(cold.report().measure_applies > 0, "cold run must measure");
+
+    let warm = AutoMatrix::with_config(exec.clone(), &data, &cfg).unwrap();
+    assert_eq!(warm.report().source, ChoiceSource::Cache);
+    assert_eq!(
+        warm.report().measure_applies,
+        0,
+        "warm cache must perform zero measurement applies"
+    );
+    assert_eq!(warm.chosen_format(), cold.chosen_format());
+    assert!(warm.report().candidates.is_empty(), "no model query either");
+
+    // the decision is keyed by precision: f32 re-tunes
+    let mut rng32 = Prng::new(31);
+    let data32 = gen_sparse::<f32>(&mut rng32, 150, 150, 6);
+    let cold32 = AutoMatrix::with_config(exec, &data32, &cfg).unwrap();
+    assert_eq!(cold32.report().source, ChoiceSource::Measured);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_cache_degrades_to_retune_then_heals() {
+    let path = tmp_cache("corrupt");
+    std::fs::write(&path, "}{ definitely not json").unwrap();
+    let mut rng = Prng::new(32);
+    let data = gen_sparse::<f64>(&mut rng, 60, 60, 4);
+    let exec = Executor::reference();
+    let cfg = AutoConfig {
+        cache_path: Some(path.clone()),
+        ..AutoConfig::default()
+    };
+
+    let first = AutoMatrix::with_config(exec.clone(), &data, &cfg).unwrap();
+    assert_eq!(first.report().source, ChoiceSource::Measured);
+
+    // the measured run rewrote the file; it must now parse and hit
+    assert!(!TuneCache::load(&path).is_empty());
+    let second = AutoMatrix::with_config(exec, &data, &cfg).unwrap();
+    assert_eq!(second.report().source, ChoiceSource::Cache);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn auto_is_a_drop_in_solver_operator() {
+    let data = stencil::laplace_2d::<f64>(16, 16);
+    let n = data.dim.rows;
+    let exec = Executor::par_with_threads(2);
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+
+    let auto = AutoMatrix::from_data(exec.clone(), &data).unwrap();
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let cg = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 1000)));
+    let result = cg.solve(&auto, &b, &mut x).unwrap();
+    assert!(result.converged, "CG on AutoMatrix: {result:?}");
+
+    // solve_data: the constructor path that accepts assembly data
+    let mut x2 = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let result2 = cg.solve_data(&exec, &data, &b, &mut x2).unwrap();
+    assert!(result2.converged, "CG solve_data: {result2:?}");
+    assert_close(x2.as_slice(), x.as_slice(), 1e-6, "same solution");
+}
+
+#[test]
+fn auto_apply_matches_hand_picked_csr() {
+    let mut rng = Prng::new(33);
+    let n = 120;
+    let data = gen_sparse::<f64>(&mut rng, n, n, 7);
+    let bv = gen_vec::<f64>(&mut rng, n);
+    for exec in [Executor::reference(), Executor::par_with_threads(2)] {
+        let auto = AutoMatrix::from_data(exec.clone(), &data).unwrap();
+        let csr = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut xa = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        auto.apply(&b, &mut xa).unwrap();
+        csr.apply(&b, &mut xc).unwrap();
+        assert_close(xa.as_slice(), xc.as_slice(), 1e-12, "auto vs csr");
+    }
+}
+
+#[test]
+fn auto_on_ported_backend_without_artifacts_constructs() {
+    // no artifacts dir: measurement probes fail, the prior decides, and
+    // apply reports the real runtime error instead of panicking
+    let exec = Executor::xla("nonexistent_artifacts_for_autotune_test").unwrap();
+    let mut rng = Prng::new(34);
+    let data = gen_sparse::<f64>(&mut rng, 30, 30, 3);
+    let auto = AutoMatrix::from_data(exec.clone(), &data).unwrap();
+    assert_eq!(auto.report().source, ChoiceSource::Prior);
+    assert_eq!(auto.report().measure_applies, 0);
+    let b = Dense::filled(exec.clone(), Dim2::new(30, 1), 1.0);
+    let mut x = Dense::zeros(exec, Dim2::new(30, 1));
+    assert!(auto.apply(&b, &mut x).is_err());
+}

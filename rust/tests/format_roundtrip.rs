@@ -1,0 +1,95 @@
+//! Property tests: every sparse format preserves assembly data exactly.
+//!
+//! Csr → {Coo, Ell, SellP, Hybrid} → Csr must reproduce the original
+//! `MatrixData` bit-for-bit — conversions only rearrange storage, they
+//! never do arithmetic, so exact equality (not tolerance) is the
+//! contract.
+
+use std::sync::Arc;
+
+use sparkle::core::executor::Executor;
+use sparkle::matrix::conversion::{convert, FromData, ToData};
+use sparkle::matrix::{Coo, Csr, Ell, Hybrid, SellP};
+use sparkle::testing::prop::{for_all, gen_sparse};
+use sparkle::{MatrixData, Value};
+
+fn assert_data_eq<T: Value>(a: &MatrixData<T>, b: &MatrixData<T>, what: &str) {
+    assert_eq!(a.dim, b.dim, "{what}: dim");
+    assert_eq!(a.nnz(), b.nnz(), "{what}: nnz");
+    for (i, (x, y)) in a.entries.iter().zip(&b.entries).enumerate() {
+        assert_eq!(x, y, "{what}: entry {i}");
+    }
+}
+
+fn round_trip_preserves<T, F>(csr: &Csr<T>, d0: &MatrixData<T>, exec: &Arc<Executor>, what: &str)
+where
+    T: Value,
+    F: FromData<T> + ToData<T>,
+{
+    let via: F = convert(csr, exec.clone()).expect(what);
+    let back: Csr<T> = convert(&via, exec.clone()).expect(what);
+    assert_data_eq(&back.to_data(), d0, what);
+    // and the intermediate format itself exports the same data
+    assert_data_eq(&via.to_data_generic(), d0, what);
+}
+
+#[test]
+fn prop_csr_round_trips_through_every_format() {
+    let exec = Executor::reference();
+    for_all(0x5EED, 12, |rng, _| {
+        let rows = 10 + rng.below(70);
+        let cols = 10 + rng.below(70);
+        let data = gen_sparse::<f64>(rng, rows, cols, 5);
+        let csr = Csr::from_data(exec.clone(), &data).unwrap();
+        let d0 = csr.to_data();
+        assert_data_eq(&d0, &data, "csr itself");
+
+        round_trip_preserves::<f64, Coo<f64>>(&csr, &d0, &exec, "via coo");
+        round_trip_preserves::<f64, Ell<f64>>(&csr, &d0, &exec, "via ell");
+        round_trip_preserves::<f64, SellP<f64>>(&csr, &d0, &exec, "via sellp");
+        round_trip_preserves::<f64, Hybrid<f64>>(&csr, &d0, &exec, "via hybrid");
+    });
+}
+
+#[test]
+fn prop_round_trip_f32() {
+    let exec = Executor::reference();
+    for_all(0xF32, 6, |rng, _| {
+        let n = 8 + rng.below(40);
+        let data = gen_sparse::<f32>(rng, n, n, 4);
+        let csr = Csr::from_data(exec.clone(), &data).unwrap();
+        let d0 = csr.to_data();
+        round_trip_preserves::<f32, Coo<f32>>(&csr, &d0, &exec, "via coo f32");
+        round_trip_preserves::<f32, Hybrid<f32>>(&csr, &d0, &exec, "via hybrid f32");
+    });
+}
+
+#[test]
+fn pathological_shapes_round_trip() {
+    let exec = Executor::reference();
+
+    // empty rows: entries only in the first and last row
+    let mut d = MatrixData::<f64>::new(sparkle::Dim2::new(9, 9));
+    d.push(0, 3, 1.5);
+    d.push(8, 0, -2.0);
+    d.normalize();
+    let csr = Csr::from_data(exec.clone(), &d).unwrap();
+    round_trip_preserves::<f64, Coo<f64>>(&csr, &d, &exec, "empty rows coo");
+    round_trip_preserves::<f64, Ell<f64>>(&csr, &d, &exec, "empty rows ell");
+    round_trip_preserves::<f64, SellP<f64>>(&csr, &d, &exec, "empty rows sellp");
+    round_trip_preserves::<f64, Hybrid<f64>>(&csr, &d, &exec, "empty rows hybrid");
+
+    // single dense row on top of a diagonal
+    let n = 17;
+    let mut d = MatrixData::<f64>::new(sparkle::Dim2::square(n));
+    for j in 0..n {
+        d.push(0, j as i32, (j + 1) as f64);
+    }
+    for i in 1..n {
+        d.push(i as i32, i as i32, 3.0);
+    }
+    d.normalize();
+    let csr = Csr::from_data(exec.clone(), &d).unwrap();
+    round_trip_preserves::<f64, SellP<f64>>(&csr, &d, &exec, "dense row sellp");
+    round_trip_preserves::<f64, Hybrid<f64>>(&csr, &d, &exec, "dense row hybrid");
+}

@@ -1,0 +1,215 @@
+//! Offline stand-in for the `num-traits` crate: the `Zero`/`One`/`Num`/
+//! `NumAssign`/`Float` tower for `f32` and `f64`, which is the exact
+//! surface sparkle's `Value` trait bounds require.
+
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Rem, RemAssign, Sub, SubAssign};
+
+/// Additive identity.
+pub trait Zero: Sized + Add<Self, Output = Self> {
+    fn zero() -> Self;
+    fn is_zero(&self) -> bool;
+}
+
+/// Multiplicative identity.
+pub trait One: Sized + Mul<Self, Output = Self> {
+    fn one() -> Self;
+}
+
+/// The basic arithmetic operators.
+pub trait NumOps<Rhs = Self, Output = Self>:
+    Add<Rhs, Output = Output>
+    + Sub<Rhs, Output = Output>
+    + Mul<Rhs, Output = Output>
+    + Div<Rhs, Output = Output>
+    + Rem<Rhs, Output = Output>
+{
+}
+
+impl<T, Rhs, Output> NumOps<Rhs, Output> for T where
+    T: Add<Rhs, Output = Output>
+        + Sub<Rhs, Output = Output>
+        + Mul<Rhs, Output = Output>
+        + Div<Rhs, Output = Output>
+        + Rem<Rhs, Output = Output>
+{
+}
+
+/// Numeric type with identities and arithmetic.
+pub trait Num: PartialEq + Zero + One + NumOps {}
+impl<T> Num for T where T: PartialEq + Zero + One + NumOps {}
+
+/// The compound-assignment operators.
+pub trait NumAssignOps<Rhs = Self>:
+    AddAssign<Rhs> + SubAssign<Rhs> + MulAssign<Rhs> + DivAssign<Rhs> + RemAssign<Rhs>
+{
+}
+
+impl<T, Rhs> NumAssignOps<Rhs> for T where
+    T: AddAssign<Rhs> + SubAssign<Rhs> + MulAssign<Rhs> + DivAssign<Rhs> + RemAssign<Rhs>
+{
+}
+
+/// Numeric type supporting the assignment operators.
+pub trait NumAssign: Num + NumAssignOps {}
+impl<T> NumAssign for T where T: Num + NumAssignOps {}
+
+/// IEEE floating-point numbers.
+pub trait Float: Num + Copy + Neg<Output = Self> + PartialOrd {
+    fn nan() -> Self;
+    fn infinity() -> Self;
+    fn neg_infinity() -> Self;
+    fn min_value() -> Self;
+    fn max_value() -> Self;
+    fn epsilon() -> Self;
+    fn is_nan(self) -> bool;
+    fn is_finite(self) -> bool;
+    fn abs(self) -> Self;
+    fn signum(self) -> Self;
+    fn recip(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn powf(self, n: Self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn log2(self) -> Self;
+    fn log10(self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn round(self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn hypot(self, other: Self) -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Zero for $t {
+            fn zero() -> Self {
+                0.0
+            }
+            fn is_zero(&self) -> bool {
+                *self == 0.0
+            }
+        }
+
+        impl One for $t {
+            fn one() -> Self {
+                1.0
+            }
+        }
+
+        impl Float for $t {
+            fn nan() -> Self {
+                <$t>::NAN
+            }
+            fn infinity() -> Self {
+                <$t>::INFINITY
+            }
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+            fn min_value() -> Self {
+                <$t>::MIN
+            }
+            fn max_value() -> Self {
+                <$t>::MAX
+            }
+            fn epsilon() -> Self {
+                <$t>::EPSILON
+            }
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            fn signum(self) -> Self {
+                <$t>::signum(self)
+            }
+            fn recip(self) -> Self {
+                <$t>::recip(self)
+            }
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            fn powf(self, n: Self) -> Self {
+                <$t>::powf(self, n)
+            }
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            fn log2(self) -> Self {
+                <$t>::log2(self)
+            }
+            fn log10(self) -> Self {
+                <$t>::log10(self)
+            }
+            fn floor(self) -> Self {
+                <$t>::floor(self)
+            }
+            fn ceil(self) -> Self {
+                <$t>::ceil(self)
+            }
+            fn round(self) -> Self {
+                <$t>::round(self)
+            }
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            fn hypot(self, other: Self) -> Self {
+                <$t>::hypot(self, other)
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm<T: Float>(v: &[T]) -> T {
+        let mut acc = T::zero();
+        for &x in v {
+            acc = acc + x * x;
+        }
+        acc.sqrt()
+    }
+
+    #[test]
+    fn generic_float_usable() {
+        assert!((norm(&[3.0f64, 4.0]) - 5.0).abs() < 1e-15);
+        assert!((norm(&[3.0f32, 4.0]) - 5.0).abs() < 1e-6);
+        assert!(f64::zero().is_zero());
+        assert_eq!(f32::one(), 1.0);
+    }
+
+    fn assign<T: NumAssign + Copy>(mut a: T, b: T) -> T {
+        a += b;
+        a *= b;
+        a
+    }
+
+    #[test]
+    fn assign_ops() {
+        assert_eq!(assign(1.0f64, 2.0), 6.0);
+    }
+}

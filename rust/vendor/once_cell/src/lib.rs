@@ -1,0 +1,117 @@
+//! Offline stand-in for the `once_cell` crate: single-threaded
+//! `unsync::OnceCell`, the only type sparkle uses (lazy per-matrix
+//! caches on `Csr`/`Coo`/`Ell`).
+
+/// Single-threaded cells.
+pub mod unsync {
+    use std::cell::UnsafeCell;
+    use std::fmt;
+
+    /// A cell which can be written to only once. `!Sync` by construction
+    /// (interior `UnsafeCell`), matching the real crate.
+    pub struct OnceCell<T> {
+        inner: UnsafeCell<Option<T>>,
+    }
+
+    impl<T> OnceCell<T> {
+        /// An empty cell.
+        pub const fn new() -> Self {
+            Self {
+                inner: UnsafeCell::new(None),
+            }
+        }
+
+        /// The stored value, if set.
+        pub fn get(&self) -> Option<&T> {
+            // Safe: &self access on a !Sync type; a stored value is
+            // never removed or replaced, so the reference stays valid.
+            unsafe { (*self.inner.get()).as_ref() }
+        }
+
+        /// Set the value; errs with the value if already set.
+        pub fn set(&self, value: T) -> Result<(), T> {
+            let slot = unsafe { &mut *self.inner.get() };
+            if slot.is_some() {
+                return Err(value);
+            }
+            *slot = Some(value);
+            Ok(())
+        }
+
+        /// The stored value, initializing with `f` if empty.
+        pub fn get_or_init(&self, f: impl FnOnce() -> T) -> &T {
+            if self.get().is_none() {
+                // `f` may itself use the cell; only write if still empty
+                // (mirrors the real crate's reentrancy behaviour closely
+                // enough for sparkle's non-reentrant initializers).
+                let value = f();
+                let _ = self.set(value);
+            }
+            self.get().expect("OnceCell initialized")
+        }
+
+        /// Take the value out, leaving the cell empty.
+        pub fn take(&mut self) -> Option<T> {
+            self.inner.get_mut().take()
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl<T: Clone> Clone for OnceCell<T> {
+        fn clone(&self) -> Self {
+            let cell = Self::new();
+            if let Some(v) = self.get() {
+                let _ = cell.set(v.clone());
+            }
+            cell
+        }
+    }
+
+    impl<T: fmt::Debug> fmt::Debug for OnceCell<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self.get() {
+                Some(v) => write!(f, "OnceCell({v:?})"),
+                None => write!(f, "OnceCell(<uninit>)"),
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn set_once() {
+            let c = OnceCell::new();
+            assert!(c.get().is_none());
+            assert!(c.set(5).is_ok());
+            assert_eq!(c.set(6), Err(6));
+            assert_eq!(c.get(), Some(&5));
+        }
+
+        #[test]
+        fn get_or_init_runs_once() {
+            let c = OnceCell::new();
+            let mut calls = 0;
+            assert_eq!(*c.get_or_init(|| {
+                calls += 1;
+                7
+            }), 7);
+            assert_eq!(*c.get_or_init(|| unreachable!()), 7);
+            assert_eq!(calls, 1);
+        }
+
+        #[test]
+        fn clone_copies_value() {
+            let c = OnceCell::new();
+            let _ = c.set(vec![1, 2]);
+            let d = c.clone();
+            assert_eq!(d.get(), Some(&vec![1, 2]));
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Offline stand-in for the `xla-rs` PJRT bridge.
+//!
+//! Mirrors the subset of the real crate's API that sparkle's `runtime`
+//! layer calls. Host-side literal construction, reshaping and readback
+//! are fully functional (sparkle's marshalling tests exercise them);
+//! `compile`/`execute` report [`Error`] because no PJRT plugin is linked
+//! into this build — exactly the failure mode of the real crate on a
+//! machine without an XLA installation. Callers that gate on artifact
+//! availability never reach those paths.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's role (opaque message carrier).
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a PJRT buffer/literal can hold.
+pub trait ArrayElement: Copy + Send + Sync + 'static {
+    /// Primitive-type tag (mirrors XLA's `PrimitiveType` names).
+    const TY: ElementType;
+    /// Serialize one element (little-endian, fixed width).
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Deserialize one element from `Self::TY.byte_width()` bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+/// Primitive element type tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::F64 => 8,
+        }
+    }
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl ArrayElement for f64 {
+    const TY: ElementType = ElementType::F64;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_le_bytes([
+            bytes[0], bytes[1], bytes[2], bytes[3], bytes[4], bytes[5], bytes[6], bytes[7],
+        ])
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Host-side literal: typed bytes plus a shape.
+#[derive(Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: ArrayElement>(v: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(v.len() * T::TY.byte_width());
+        for &x in v {
+            x.write_le(&mut data);
+        }
+        Literal {
+            ty: T::TY,
+            dims: vec![v.len() as i64],
+            data,
+        }
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.ty.byte_width()
+    }
+
+    /// Shape dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret with new dims; element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into dims {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Read back as a host vector of `T` (type must match).
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::new(format!(
+                "to_vec: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let w = self.ty.byte_width();
+        Ok(self.data.chunks_exact(w).map(T::read_le).collect())
+    }
+
+    /// Split a tuple literal into its parts. The stub never produces
+    /// tuple literals (execution is unavailable), so this errs on
+    /// non-tuples rather than silently wrapping.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::new(
+            "decompose_tuple: no tuple literals without a PJRT execution",
+        ))
+    }
+}
+
+/// A PJRT device handle (opaque).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// Device-resident buffer. The stub keeps the literal host-side.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled-and-loaded executable handle.
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "execute {}: no PJRT plugin in this build",
+            self.name
+        )))
+    }
+
+    /// Execute on device-resident buffers.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "execute_b {}: no PJRT plugin in this build",
+            self.name
+        )))
+    }
+}
+
+/// Parsed HLO module (text payload is retained but never lowered).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file from disk.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("read {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    text_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            text_len: proto.text.len(),
+        }
+    }
+}
+
+/// PJRT client. The CPU client constructs successfully (matching the
+/// real crate, whose CPU plugin is always linked); compilation fails.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    /// CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu" })
+    }
+
+    /// Platform name, e.g. "cpu".
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    /// Move host data into a buffer on `device` (default device if None).
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(Error::new(format!(
+                "buffer_from_host_buffer: {} elements into dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(data).reshape(&dims_i64)?;
+        Ok(PjRtBuffer { literal: lit })
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(format!(
+            "compile: no PJRT plugin in this build ({} bytes of HLO text)",
+            comp.text_len
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f64() {
+        let v = vec![1.0f64, -2.5, 3.25];
+        let lit = Literal::vec1(&v);
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f64>().unwrap(), v);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]);
+        let m = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(lit.reshape(&[3]).is_err());
+        // rank-0 scalar
+        let s = Literal::vec1(&[7.0f32]).reshape(&[]).unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn client_buffers_work_execution_fails() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        let buf = c
+            .buffer_from_host_buffer(&[1.0f64, 2.0], &[2], None)
+            .unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().to_vec::<f64>().unwrap(), vec![1.0, 2.0]);
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: "HloModule m".into(),
+        });
+        assert!(c.compile(&comp).is_err());
+    }
+}
