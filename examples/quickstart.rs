@@ -11,6 +11,7 @@ use sparkle::core::executor::Executor;
 use sparkle::core::linop::LinOp;
 use sparkle::matgen::stencil;
 use sparkle::matrix::{Coo, Csr, Dense, Ell};
+use sparkle::resilience::{FaultSpec, FaultyOp, ResilientSolver};
 use sparkle::solver::{Cg, Solver, SolverConfig};
 use sparkle::stop::Criterion;
 use sparkle::Dim2;
@@ -82,6 +83,41 @@ fn main() -> sparkle::Result<()> {
         "CG via solve_data: converged={} in {} iterations",
         auto_result.converged, auto_result.iterations
     );
+
+    // 6. resilient solving: wrap the operator in a seeded fault injector
+    //    (NaN payloads + transient failures), then let ResilientSolver
+    //    checkpoint, verify the true residual, roll back and retry. The
+    //    reported residual is the *verified* ||b - A x||, never the
+    //    recurrence's claim.
+    let faulty = FaultyOp::new(
+        Csr::from_data(exec.clone(), &data)?,
+        FaultSpec {
+            seed: 42,
+            nan_prob: 0.02,
+            transient_prob: 0.02,
+            max_faults: 3,
+            armed_after: 5,
+            ..FaultSpec::default()
+        },
+    );
+    let mut xr = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let resilient = ResilientSolver::new(Criterion::residual(1e-10, 5000));
+    let outcome = resilient.solve_outcome(&faulty, &b, &mut xr)?;
+    println!(
+        "resilient {}: converged={} (recovered={}) in {} iterations, \
+         {} restarts / {} fallbacks, verified residual {:.3e}",
+        outcome.solver,
+        outcome.result.converged,
+        outcome.recovered(),
+        outcome.result.iterations,
+        outcome.restarts,
+        outcome.fallbacks,
+        outcome.true_resnorm
+    );
+    for event in &outcome.events {
+        println!("  recovery event: {event:?}");
+    }
+    assert!(outcome.result.converged);
     println!("quickstart OK");
     Ok(())
 }

@@ -10,8 +10,9 @@
 //! paid at matrix construction, not in a bench loop.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::bench_util::{Stats, Timer};
+use crate::bench_util::{time_secs, Stats};
 use crate::core::dim::Dim2;
 use crate::core::error::Result;
 use crate::core::executor::Executor;
@@ -31,6 +32,14 @@ pub struct MeasurePolicy {
     pub reps: usize,
     /// How many of the prior's top candidates to measure.
     pub top_k: usize,
+    /// Hard cap on applies per candidate (probe + warmup + timed);
+    /// `0` means unlimited. Guards against a pathological candidate
+    /// eating the tuning budget.
+    pub max_applies: usize,
+    /// Wall-clock budget per candidate. Once exceeded, remaining
+    /// warmup/timed applies are skipped — but at least one timed
+    /// sample is always taken so the candidate stays rankable.
+    pub time_budget: Duration,
 }
 
 impl Default for MeasurePolicy {
@@ -39,6 +48,8 @@ impl Default for MeasurePolicy {
             warmup: 1,
             reps: 5,
             top_k: 3,
+            max_applies: 64,
+            time_budget: Duration::from_secs(2),
         }
     }
 }
@@ -76,10 +87,12 @@ pub fn build_format<T: Value>(
 }
 
 /// Convert and time each candidate format; returns measurements sorted
-/// fastest-first. Candidates whose conversion or probe apply fails
-/// (e.g. an executor without the needed kernel artifacts) are skipped;
-/// the result may therefore be shorter than `formats` — empty when
-/// nothing on this executor can apply at all.
+/// fastest-first. Candidates whose conversion fails, whose applies
+/// error (e.g. an executor without the needed kernel artifacts — even
+/// mid-measurement, after a successful probe), or whose output is
+/// non-finite are *disqualified*, never panicked on; the result may
+/// therefore be shorter than `formats` — empty when nothing on this
+/// executor can apply at all.
 pub fn measure_formats<T: Value>(
     exec: &Arc<Executor>,
     data: &MatrixData<T>,
@@ -89,24 +102,65 @@ pub fn measure_formats<T: Value>(
     let dim = data.dim;
     let b = crate::matrix::Dense::filled(exec.clone(), Dim2::new(dim.cols, 1), T::one());
     let mut x = crate::matrix::Dense::zeros(exec.clone(), Dim2::new(dim.rows, 1));
-    let timer = Timer::new(policy.warmup, policy.reps.max(1));
     let mut out = Vec::with_capacity(formats.len());
-    for &format in formats {
+    'candidates: for &format in formats {
         let Ok(op) = build_format(exec.clone(), data, format) else {
             continue;
         };
+        // fresh output per candidate so a poisoned result from a prior
+        // candidate can never leak into this one's finiteness check
+        x.fill(T::zero());
+        let mut spent = 0.0f64;
+        let budget = policy.time_budget.as_secs_f64();
+        let over = |applies: usize, spent: f64| {
+            (policy.max_applies > 0 && applies >= policy.max_applies)
+                || (budget > 0.0 && spent >= budget)
+        };
         // probe once: an executor may construct the format but lack the
         // kernel (ported backend without artifacts) — skip, don't panic
-        if op.apply(&b, &mut x).is_err() {
+        let mut failed = false;
+        spent += time_secs(|| failed = op.apply(&b, &mut x).is_err());
+        if failed {
             continue;
         }
-        let seconds = timer.run(|| {
-            op.apply(&b, &mut x).expect("probed apply cannot fail");
-        });
+        let mut applies = 1usize;
+        if !x.as_slice().iter().all(|v| v.as_f64().is_finite()) {
+            continue; // wrong answers are worse than slow answers
+        }
+        for _ in 0..policy.warmup {
+            if over(applies, spent) {
+                break;
+            }
+            let mut failed = false;
+            spent += time_secs(|| failed = op.apply(&b, &mut x).is_err());
+            applies += 1;
+            if failed {
+                continue 'candidates;
+            }
+        }
+        let mut samples = Vec::with_capacity(policy.reps.max(1));
+        for i in 0..policy.reps.max(1) {
+            // always take at least one timed sample so the candidate
+            // stays rankable even when the probe ate the whole budget
+            if i > 0 && over(applies, spent) {
+                break;
+            }
+            let mut failed = false;
+            let s = time_secs(|| failed = op.apply(&b, &mut x).is_err());
+            applies += 1;
+            if failed {
+                continue 'candidates;
+            }
+            spent += s;
+            samples.push(s);
+        }
+        if !x.as_slice().iter().all(|v| v.as_f64().is_finite()) {
+            continue;
+        }
         out.push(Measurement {
             format,
-            seconds,
-            applies: 1 + policy.warmup + policy.reps.max(1),
+            seconds: Stats::from_samples(&samples),
+            applies,
         });
     }
     out.sort_by(|a, b| {
@@ -147,10 +201,42 @@ mod tests {
             warmup: 0,
             reps: 2,
             top_k: 1,
+            ..Default::default()
         };
         let ms = measure_formats(&exec, &data, &[FormatChoice::Csr], policy);
         assert_eq!(ms.len(), 1);
         assert_eq!(ms[0].applies, 3); // probe + 2 timed
         assert_eq!(ms[0].format, FormatChoice::Csr);
+    }
+
+    /// A candidate whose apply produces non-finite output must be
+    /// disqualified, not ranked (and certainly not panicked on).
+    #[test]
+    fn nan_matrix_disqualifies_all_candidates() {
+        let mut rng = Prng::new(9);
+        let mut data = gen_sparse::<f64>(&mut rng, 30, 30, 3);
+        data.entries[0].val = f64::NAN;
+        let exec = Executor::reference();
+        let ms = measure_formats(&exec, &data, &FormatChoice::ALL, MeasurePolicy::default());
+        assert!(ms.is_empty(), "NaN output must disqualify, got {ms:?}");
+    }
+
+    /// The per-candidate apply cap bounds work even with a huge reps
+    /// setting, while still producing at least one timed sample.
+    #[test]
+    fn apply_cap_bounds_measurement() {
+        let mut rng = Prng::new(10);
+        let data = gen_sparse::<f64>(&mut rng, 30, 30, 3);
+        let exec = Executor::reference();
+        let policy = MeasurePolicy {
+            warmup: 100,
+            reps: 100,
+            max_applies: 4,
+            ..Default::default()
+        };
+        let ms = measure_formats(&exec, &data, &[FormatChoice::Csr], policy);
+        assert_eq!(ms.len(), 1);
+        assert!(ms[0].applies <= 5, "cap 4 + guaranteed sample, got {}", ms[0].applies);
+        assert!(ms[0].seconds.median >= 0.0);
     }
 }

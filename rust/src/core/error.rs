@@ -32,6 +32,16 @@ pub enum SparkleError {
         iters: usize,
         resnorm: f64,
     },
+
+    /// Solver broke down numerically (NaN/Inf residual, collapsed
+    /// recurrence denominator, stagnation) and recovery — if attempted —
+    /// was exhausted.
+    Breakdown {
+        solver: &'static str,
+        iters: usize,
+        resnorm: f64,
+        reason: crate::stop::Breakdown,
+    },
 }
 
 impl std::fmt::Display for SparkleError {
@@ -56,6 +66,15 @@ impl std::fmt::Display for SparkleError {
             } => write!(
                 f,
                 "solver `{solver}` did not converge in {iters} iterations (residual {resnorm:.3e})"
+            ),
+            SparkleError::Breakdown {
+                solver,
+                iters,
+                resnorm,
+                reason,
+            } => write!(
+                f,
+                "solver `{solver}` broke down after {iters} iterations: {reason} (residual {resnorm:.3e})"
             ),
         }
     }

@@ -1,10 +1,17 @@
 //! BLAS-1 dispatch: one entry point per operation, switching on the
 //! executor (the paper's `operations` class, §2).
+//!
+//! Degraded mode: when the xla runtime's circuit breaker is open
+//! (repeated dispatch failures — see `resilience/retry.rs`), the Xla
+//! arms route to the host `par` kernels instead. The check happens
+//! *before* the xla call so a mutating kernel never runs twice on the
+//! same operand; while the breaker is closed, failures propagate
+//! unchanged.
 
 use std::sync::Arc;
 
 use crate::core::error::{Result, SparkleError};
-use crate::core::executor::Executor;
+use crate::core::executor::{Executor, ParConfig};
 use crate::core::types::Value;
 use crate::kernels::{par, reference, xla};
 use crate::matrix::dense::Dense;
@@ -25,7 +32,13 @@ pub fn axpy<T: Value>(exec: &Arc<Executor>, alpha: T, x: &Dense<T>, y: &mut Dens
     match &**exec {
         Executor::Reference => reference::axpy(alpha, x.as_slice(), y.as_mut_slice()),
         Executor::Par(cfg) => par::axpy(cfg, alpha, x.as_slice(), y.as_mut_slice()),
-        Executor::Xla(e) => xla::axpy(&e.runtime, alpha, x.as_slice(), y.as_mut_slice())?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::axpy(&ParConfig::default(), alpha, x.as_slice(), y.as_mut_slice())
+            } else {
+                xla::axpy(&e.runtime, alpha, x.as_slice(), y.as_mut_slice())?
+            }
+        }
     }
     Ok(())
 }
@@ -42,7 +55,19 @@ pub fn axpby<T: Value>(
     match &**exec {
         Executor::Reference => reference::axpby(alpha, x.as_slice(), beta, y.as_mut_slice()),
         Executor::Par(cfg) => par::axpby(cfg, alpha, x.as_slice(), beta, y.as_mut_slice()),
-        Executor::Xla(e) => xla::axpby(&e.runtime, alpha, x.as_slice(), beta, y.as_mut_slice())?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::axpby(
+                    &ParConfig::default(),
+                    alpha,
+                    x.as_slice(),
+                    beta,
+                    y.as_mut_slice(),
+                )
+            } else {
+                xla::axpby(&e.runtime, alpha, x.as_slice(), beta, y.as_mut_slice())?
+            }
+        }
     }
     Ok(())
 }
@@ -52,7 +77,13 @@ pub fn scal<T: Value>(exec: &Arc<Executor>, beta: T, x: &mut Dense<T>) -> Result
     match &**exec {
         Executor::Reference => reference::scal(beta, x.as_mut_slice()),
         Executor::Par(cfg) => par::scal(cfg, beta, x.as_mut_slice()),
-        Executor::Xla(e) => xla::scal(&e.runtime, beta, x.as_mut_slice())?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::scal(&ParConfig::default(), beta, x.as_mut_slice())
+            } else {
+                xla::scal(&e.runtime, beta, x.as_mut_slice())?
+            }
+        }
     }
     Ok(())
 }
@@ -63,7 +94,13 @@ pub fn dot<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result
     Ok(match &**exec {
         Executor::Reference => reference::dot(x.as_slice(), y.as_slice()),
         Executor::Par(cfg) => par::dot(cfg, x.as_slice(), y.as_slice()),
-        Executor::Xla(e) => xla::dot(&e.runtime, x.as_slice(), y.as_slice())?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::dot(&ParConfig::default(), x.as_slice(), y.as_slice())
+            } else {
+                xla::dot(&e.runtime, x.as_slice(), y.as_slice())?
+            }
+        }
     })
 }
 
@@ -72,7 +109,13 @@ pub fn norm2<T: Value>(exec: &Arc<Executor>, x: &Dense<T>) -> Result<T> {
     Ok(match &**exec {
         Executor::Reference => reference::norm2(x.as_slice()),
         Executor::Par(cfg) => par::norm2(cfg, x.as_slice()),
-        Executor::Xla(e) => xla::norm2(&e.runtime, x.as_slice())?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::norm2(&ParConfig::default(), x.as_slice())
+            } else {
+                xla::norm2(&e.runtime, x.as_slice())?
+            }
+        }
     })
 }
 
@@ -89,7 +132,16 @@ pub fn ew_mul<T: Value>(
         Executor::Reference => reference::ew_mul(x.as_slice(), y.as_slice(), z.as_mut_slice()),
         Executor::Par(cfg) => par::ew_mul(cfg, x.as_slice(), y.as_slice(), z.as_mut_slice()),
         Executor::Xla(e) => {
-            xla::ew_mul(&e.runtime, x.as_slice(), y.as_slice(), z.as_mut_slice())?
+            if e.runtime.degraded() {
+                par::ew_mul(
+                    &ParConfig::default(),
+                    x.as_slice(),
+                    y.as_slice(),
+                    z.as_mut_slice(),
+                )
+            } else {
+                xla::ew_mul(&e.runtime, x.as_slice(), y.as_slice(), z.as_mut_slice())?
+            }
         }
     }
     Ok(())

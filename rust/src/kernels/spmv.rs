@@ -1,9 +1,14 @@
 //! SpMV dispatch: per-format entry points switching on the executor.
+//!
+//! Like `kernels/blas.rs`, the Xla arms check the runtime's circuit
+//! breaker *before* dispatching: once the breaker opens (repeated
+//! execute failures) the formats route to the host `par` kernels, so a
+//! read-modify-write kernel never runs twice on the same operand.
 
 use std::sync::Arc;
 
 use crate::core::error::{Result, SparkleError};
-use crate::core::executor::Executor;
+use crate::core::executor::{Executor, ParConfig};
 use crate::core::types::Value;
 use crate::kernels::{par, reference, xla};
 use crate::matrix::coo::Coo;
@@ -35,7 +40,13 @@ pub fn csr_apply_advanced<T: Value>(
     match &**exec {
         Executor::Reference => reference::csr_spmv_advanced(alpha, a, beta, b, x),
         Executor::Par(cfg) => par::csr_spmv_advanced(cfg, alpha, a, beta, b, x),
-        Executor::Xla(e) => xla::csr_spmv_advanced(&e.runtime, alpha, a, beta, b, x)?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::csr_spmv_advanced(&ParConfig::default(), alpha, a, beta, b, x)
+            } else {
+                xla::csr_spmv_advanced(&e.runtime, alpha, a, beta, b, x)?
+            }
+        }
     }
     Ok(())
 }
@@ -62,7 +73,13 @@ pub fn coo_apply_advanced<T: Value>(
     match &**exec {
         Executor::Reference => reference::coo_spmv_advanced(alpha, a, beta, b, x),
         Executor::Par(cfg) => par::coo_spmv_advanced(cfg, alpha, a, beta, b, x),
-        Executor::Xla(e) => xla::coo_spmv_advanced(&e.runtime, alpha, a, beta, b, x)?,
+        Executor::Xla(e) => {
+            if e.runtime.degraded() {
+                par::coo_spmv_advanced(&ParConfig::default(), alpha, a, beta, b, x)
+            } else {
+                xla::coo_spmv_advanced(&e.runtime, alpha, a, beta, b, x)?
+            }
+        }
     }
     Ok(())
 }
@@ -78,7 +95,11 @@ pub fn ell_apply<T: Value>(
         Executor::Reference => reference::ell_spmv(a, b, x),
         Executor::Par(cfg) => par::ell_spmv(cfg, a, b, x),
         Executor::Xla(e) => {
-            xla::ell_spmv_advanced(&e.runtime, T::one(), a, T::zero(), b, x)?
+            if e.runtime.degraded() {
+                par::ell_spmv(&ParConfig::default(), a, b, x)
+            } else {
+                xla::ell_spmv_advanced(&e.runtime, T::one(), a, T::zero(), b, x)?
+            }
         }
     }
     Ok(())
@@ -94,7 +115,9 @@ pub fn ell_apply_advanced<T: Value>(
     x: &mut Dense<T>,
 ) -> Result<()> {
     match &**exec {
-        Executor::Xla(e) => xla::ell_spmv_advanced(&e.runtime, alpha, a, beta, b, x),
+        Executor::Xla(e) if !e.runtime.degraded() => {
+            xla::ell_spmv_advanced(&e.runtime, alpha, a, beta, b, x)
+        }
         _ => {
             // compose: tmp = A b; x = alpha tmp + beta x
             let mut tmp = Dense::zeros(exec.clone(), x.shape());

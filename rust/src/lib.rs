@@ -13,6 +13,11 @@
 //! * **autotune** — adaptive format selection: sparsity features, a
 //!   roofline prior, empirical top-k measurement and a persistent
 //!   tuning cache behind the drop-in [`AutoMatrix`] operator.
+//! * **resilience** — breakdown detection in every Krylov driver,
+//!   checkpoint/restart recovery with true-residual verification
+//!   ([`ResilientSolver`]), backend degradation (retry + circuit
+//!   breaker, xla → par fallback) and a seedable fault-injection
+//!   harness.
 //! * **perfmodel** — calibrated roofline models of the paper's GPUs
 //!   (GEN9, GEN12, V100, RadeonVII): the testbed substitute.
 //! * **matgen / io** — SuiteSparse-like synthetic matrices + MatrixMarket.
@@ -31,6 +36,7 @@ pub mod matgen;
 pub mod matrix;
 pub mod perfmodel;
 pub mod precond;
+pub mod resilience;
 pub mod runtime;
 pub mod solver;
 pub mod stop;
@@ -45,3 +51,4 @@ pub use crate::core::linop::LinOp;
 pub use crate::core::matrix_data::MatrixData;
 pub use crate::core::types::{IndexType, Precision, Value};
 pub use crate::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+pub use crate::resilience::ResilientSolver;

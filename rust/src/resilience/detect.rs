@@ -1,0 +1,176 @@
+//! Breakdown detection policy shared by all Krylov drivers.
+//!
+//! Every solver builds one [`BreakdownDetector`] per solve from the
+//! [`BreakdownPolicy`] in its [`SolverConfig`](crate::solver::SolverConfig)
+//! and feeds it (a) each recurrence denominator before dividing by it
+//! and (b) each new residual norm. The detector answers with a
+//! structured [`Breakdown`] the moment the iteration becomes
+//! unsalvageable, so drivers stop instead of spinning NaNs to
+//! `max_iters`.
+
+use crate::stop::Breakdown;
+
+/// Thresholds for breakdown detection.
+///
+/// The defaults are deliberately conservative: the denominator floor
+/// sits far below anything a healthy double-precision recurrence
+/// produces (benches that iterate 1000x past convergence bottom out
+/// around 1e-32), and stagnation detection is off unless a window is
+/// configured — [`ResilientSolver`](crate::resilience::ResilientSolver)
+/// turns it on for its inner segments.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakdownPolicy {
+    /// A recurrence denominator with |v| below this is reported as a
+    /// [`Breakdown::ZeroDenominator`]. `0.0` disables the floor
+    /// (NaN/Inf operands are still reported).
+    pub denominator_floor: f64,
+    /// Report [`Breakdown::Stagnation`] when the residual norm fails to
+    /// improve by [`stagnation_improvement`](Self::stagnation_improvement)
+    /// for this many consecutive iterations. `0` disables.
+    pub stagnation_window: usize,
+    /// Relative improvement that resets the stagnation window: a new
+    /// residual counts as progress when
+    /// `resnorm < best * (1 - stagnation_improvement)`.
+    pub stagnation_improvement: f64,
+}
+
+impl Default for BreakdownPolicy {
+    fn default() -> Self {
+        Self {
+            denominator_floor: 1e-280,
+            stagnation_window: 0,
+            stagnation_improvement: 1e-3,
+        }
+    }
+}
+
+impl BreakdownPolicy {
+    /// Policy that never reports a breakdown for finite values
+    /// (NaN/Inf operands and residuals are still caught).
+    pub fn lenient() -> Self {
+        Self {
+            denominator_floor: 0.0,
+            stagnation_window: 0,
+            ..Self::default()
+        }
+    }
+
+    /// Fresh per-solve detector state.
+    pub fn detector(&self) -> BreakdownDetector {
+        BreakdownDetector {
+            policy: *self,
+            best: f64::INFINITY,
+            since_best: 0,
+        }
+    }
+}
+
+/// Per-solve detection state (stagnation tracking).
+#[derive(Debug, Clone)]
+pub struct BreakdownDetector {
+    policy: BreakdownPolicy,
+    best: f64,
+    since_best: usize,
+}
+
+impl BreakdownDetector {
+    /// Check a recurrence scalar that the solver is about to divide by
+    /// (or that a division just produced). `what` names the scalar for
+    /// the structured report.
+    pub fn scalar(&self, what: &'static str, v: f64) -> Option<Breakdown> {
+        if !v.is_finite() {
+            return Some(Breakdown::NanOperand { what });
+        }
+        if self.policy.denominator_floor > 0.0 && v.abs() < self.policy.denominator_floor {
+            return Some(Breakdown::ZeroDenominator { what });
+        }
+        None
+    }
+
+    /// Feed one new residual norm; reports NaN/Inf immediately and
+    /// stagnation once the configured window elapses with no progress.
+    pub fn residual(&mut self, resnorm: f64) -> Option<Breakdown> {
+        if !resnorm.is_finite() {
+            return Some(Breakdown::NanResidual);
+        }
+        if self.policy.stagnation_window == 0 {
+            return None;
+        }
+        if resnorm < self.best * (1.0 - self.policy.stagnation_improvement) {
+            self.best = resnorm;
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+            if self.since_best >= self.policy.stagnation_window {
+                return Some(Breakdown::Stagnation {
+                    window: self.policy.stagnation_window,
+                });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_flags_nan_and_zero() {
+        let det = BreakdownPolicy::default().detector();
+        assert_eq!(
+            det.scalar("rho", f64::NAN),
+            Some(Breakdown::NanOperand { what: "rho" })
+        );
+        assert_eq!(
+            det.scalar("rho", f64::INFINITY),
+            Some(Breakdown::NanOperand { what: "rho" })
+        );
+        assert_eq!(
+            det.scalar("omega", 0.0),
+            Some(Breakdown::ZeroDenominator { what: "omega" })
+        );
+        assert_eq!(det.scalar("rho", 1e-32), None, "healthy tiny scalar passes");
+        assert_eq!(det.scalar("rho", -3.5), None);
+    }
+
+    #[test]
+    fn lenient_still_flags_nan() {
+        let det = BreakdownPolicy::lenient().detector();
+        assert_eq!(det.scalar("rho", 0.0), None);
+        assert!(det.scalar("rho", f64::NAN).is_some());
+    }
+
+    #[test]
+    fn stagnation_window_counts_no_progress() {
+        let policy = BreakdownPolicy {
+            stagnation_window: 3,
+            ..BreakdownPolicy::default()
+        };
+        let mut det = policy.detector();
+        assert_eq!(det.residual(1.0), None);
+        assert_eq!(det.residual(0.5), None); // progress resets
+        assert_eq!(det.residual(0.499), None); // < 0.1% improvement: no progress
+        assert_eq!(det.residual(0.499), None);
+        assert_eq!(
+            det.residual(0.499),
+            Some(Breakdown::Stagnation { window: 3 })
+        );
+    }
+
+    #[test]
+    fn residual_nan_always_reported() {
+        let mut det = BreakdownPolicy::default().detector();
+        assert_eq!(det.residual(f64::NAN), Some(Breakdown::NanResidual));
+        let mut det = BreakdownPolicy::lenient().detector();
+        assert_eq!(det.residual(f64::INFINITY), Some(Breakdown::NanResidual));
+    }
+
+    #[test]
+    fn disabled_window_never_stagnates() {
+        let mut det = BreakdownPolicy::default().detector();
+        for _ in 0..10_000 {
+            assert_eq!(det.residual(1.0), None);
+        }
+    }
+}

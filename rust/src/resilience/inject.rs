@@ -1,0 +1,322 @@
+//! Deterministic fault injection for resilience testing.
+//!
+//! [`FaultyOp`] wraps any [`LinOp`] and injects the three failure modes
+//! the porting papers report from immature device stacks — NaN payloads
+//! (bad kernel output), silent bit-flips (memory corruption), and
+//! transient apply errors (failed launches) — from a seedable PRNG, so
+//! detection and recovery are exercised in CI without real hardware and
+//! every run is reproducible from its seed.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::error::{Result, SparkleError};
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+use crate::testing::prng::Prng;
+
+/// What to inject, and how often.
+///
+/// Probabilities are per `apply`; their sum should stay ≤ 1. With the
+/// default spec no faults fire — construct with struct-update syntax:
+///
+/// ```
+/// # use sparkle::resilience::FaultSpec;
+/// let spec = FaultSpec { seed: 7, nan_prob: 0.2, ..FaultSpec::default() };
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// PRNG seed; equal seeds give identical fault schedules.
+    pub seed: u64,
+    /// Probability of overwriting one output element with NaN.
+    pub nan_prob: f64,
+    /// Probability of flipping one high bit of one output element.
+    pub bitflip_prob: f64,
+    /// Probability of failing the whole apply with a transient error.
+    pub transient_prob: f64,
+    /// Stop injecting after this many faults (`0` = unlimited).
+    pub max_faults: usize,
+    /// Leave the first N applies clean (lets a solve get going).
+    pub armed_after: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0x5EED,
+            nan_prob: 0.0,
+            bitflip_prob: 0.0,
+            transient_prob: 0.0,
+            max_faults: 0,
+            armed_after: 0,
+        }
+    }
+}
+
+/// One injected fault, for post-mortem assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// An output element was overwritten with NaN.
+    NanPayload,
+    /// One bit of an output element was flipped.
+    BitFlip { bit: u32 },
+    /// The apply failed with `SparkleError::Runtime`.
+    Transient,
+}
+
+/// Record of a fired fault: which apply, what kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// 1-based apply counter at which the fault fired.
+    pub apply_index: usize,
+    /// What was injected.
+    pub kind: FaultKind,
+}
+
+struct InjectState {
+    rng: Prng,
+    applies: usize,
+    log: Vec<FaultEvent>,
+}
+
+struct Plan {
+    kind: FaultKind,
+    raw: u64,
+}
+
+/// A [`LinOp`] wrapper that injects deterministic faults.
+///
+/// Interior mutability via `RefCell` is sound here: `LinOp` is neither
+/// `Send` nor `Sync` by design (see `core/linop.rs`), so applies are
+/// never concurrent.
+pub struct FaultyOp<T> {
+    inner: Box<dyn LinOp<T>>,
+    spec: FaultSpec,
+    state: RefCell<InjectState>,
+}
+
+impl<T: Value> FaultyOp<T> {
+    /// Wrap `inner`, injecting faults per `spec`.
+    pub fn new(inner: impl LinOp<T> + 'static, spec: FaultSpec) -> Self {
+        Self::from_boxed(Box::new(inner), spec)
+    }
+
+    /// Wrap an already-boxed operator.
+    pub fn from_boxed(inner: Box<dyn LinOp<T>>, spec: FaultSpec) -> Self {
+        Self {
+            inner,
+            spec,
+            state: RefCell::new(InjectState {
+                rng: Prng::new(spec.seed),
+                applies: 0,
+                log: Vec::new(),
+            }),
+        }
+    }
+
+    /// Total applies seen (including failed ones).
+    pub fn applies(&self) -> usize {
+        self.state.borrow().applies
+    }
+
+    /// Faults fired so far, in order.
+    pub fn faults(&self) -> Vec<FaultEvent> {
+        self.state.borrow().log.clone()
+    }
+
+    /// Decide (and log) the fault for this apply, if any. All random
+    /// draws happen here so the schedule depends only on the seed and
+    /// the apply count, not on vector contents.
+    fn plan(&self) -> Option<Plan> {
+        let mut st = self.state.borrow_mut();
+        st.applies += 1;
+        let apply_index = st.applies;
+        if apply_index <= self.spec.armed_after {
+            return None;
+        }
+        if self.spec.max_faults > 0 && st.log.len() >= self.spec.max_faults {
+            return None;
+        }
+        let u = st.rng.unit();
+        let raw = st.rng.next_u64();
+        let kind = if u < self.spec.transient_prob {
+            FaultKind::Transient
+        } else if u < self.spec.transient_prob + self.spec.nan_prob {
+            FaultKind::NanPayload
+        } else if u < self.spec.transient_prob + self.spec.nan_prob + self.spec.bitflip_prob {
+            // bits 40..=62: high mantissa + exponent — corruption that is
+            // large enough to matter, never the harmless low mantissa
+            FaultKind::BitFlip {
+                bit: 40 + ((raw >> 32) % 23) as u32,
+            }
+        } else {
+            return None;
+        };
+        st.log.push(FaultEvent { apply_index, kind });
+        Some(Plan { kind, raw })
+    }
+
+    fn corrupt(&self, x: &mut Dense<T>, plan: &Plan) {
+        let xs = x.as_mut_slice();
+        if xs.is_empty() {
+            return;
+        }
+        let idx = (plan.raw % xs.len() as u64) as usize;
+        match plan.kind {
+            FaultKind::NanPayload => xs[idx] = T::from_f64(f64::NAN),
+            FaultKind::BitFlip { bit } => {
+                let v = xs[idx].as_f64();
+                xs[idx] = T::from_f64(f64::from_bits(v.to_bits() ^ (1u64 << bit)));
+            }
+            FaultKind::Transient => unreachable!("transient faults never reach corrupt()"),
+        }
+    }
+}
+
+impl<T: Value> LinOp<T> for FaultyOp<T> {
+    fn shape(&self) -> Dim2 {
+        self.inner.shape()
+    }
+
+    fn executor(&self) -> &Arc<Executor> {
+        self.inner.executor()
+    }
+
+    fn apply(&self, b: &Dense<T>, x: &mut Dense<T>) -> Result<()> {
+        let plan = self.plan();
+        if matches!(plan, Some(Plan { kind: FaultKind::Transient, .. })) {
+            return Err(SparkleError::Runtime(
+                "injected transient apply failure".into(),
+            ));
+        }
+        self.inner.apply(b, x)?;
+        if let Some(p) = plan {
+            self.corrupt(x, &p);
+        }
+        Ok(())
+    }
+
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        let plan = self.plan();
+        if matches!(plan, Some(Plan { kind: FaultKind::Transient, .. })) {
+            return Err(SparkleError::Runtime(
+                "injected transient apply failure".into(),
+            ));
+        }
+        self.inner.apply_advanced(alpha, b, beta, x)?;
+        if let Some(p) = plan {
+            self.corrupt(x, &p);
+        }
+        Ok(())
+    }
+
+    fn op_name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::stencil;
+    use crate::matrix::Csr;
+
+    fn op(spec: FaultSpec) -> (FaultyOp<f64>, Dense<f64>, Dense<f64>) {
+        let exec = Executor::reference();
+        let data = stencil::laplace_2d::<f64>(8, 4);
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::filled(exec.clone(), Dim2::new(32, 1), 1.0);
+        let x = Dense::zeros(exec, Dim2::new(32, 1));
+        (FaultyOp::new(a, spec), b, x)
+    }
+
+    #[test]
+    fn no_faults_by_default_and_delegates() {
+        let (f, b, mut x) = op(FaultSpec::default());
+        for _ in 0..10 {
+            f.apply(&b, &mut x).unwrap();
+        }
+        assert_eq!(f.applies(), 10);
+        assert!(f.faults().is_empty());
+        assert!(x.as_slice().iter().all(|v| v.is_finite()));
+        assert_eq!(f.shape(), Dim2::new(32, 32));
+        assert_eq!(f.op_name(), "faulty");
+    }
+
+    #[test]
+    fn nan_payload_poisons_one_element() {
+        let (f, b, mut x) = op(FaultSpec {
+            seed: 1,
+            nan_prob: 1.0,
+            ..FaultSpec::default()
+        });
+        f.apply(&b, &mut x).unwrap();
+        assert_eq!(x.as_slice().iter().filter(|v| v.is_nan()).count(), 1);
+        assert_eq!(f.faults().len(), 1);
+        assert_eq!(f.faults()[0].kind, FaultKind::NanPayload);
+    }
+
+    #[test]
+    fn transient_fails_without_touching_x() {
+        let (f, b, mut x) = op(FaultSpec {
+            seed: 2,
+            transient_prob: 1.0,
+            ..FaultSpec::default()
+        });
+        x.fill(7.0);
+        let err = f.apply(&b, &mut x).unwrap_err();
+        assert!(err.to_string().contains("injected transient"));
+        assert!(x.as_slice().iter().all(|&v| v == 7.0), "x untouched");
+    }
+
+    #[test]
+    fn bitflip_changes_exactly_one_element() {
+        let (f, b, mut x) = op(FaultSpec {
+            seed: 3,
+            bitflip_prob: 1.0,
+            max_faults: 1,
+            ..FaultSpec::default()
+        });
+        let (fc, bc, mut xc) = op(FaultSpec::default());
+        f.apply(&b, &mut x).unwrap();
+        fc.apply(&bc, &mut xc).unwrap();
+        let diffs = x
+            .as_slice()
+            .iter()
+            .zip(xc.as_slice())
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert_eq!(diffs, 1);
+        assert!(matches!(f.faults()[0].kind, FaultKind::BitFlip { bit } if (40..=62).contains(&bit)));
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_respects_arming() {
+        let spec = FaultSpec {
+            seed: 42,
+            nan_prob: 0.3,
+            transient_prob: 0.2,
+            bitflip_prob: 0.1,
+            armed_after: 3,
+            max_faults: 4,
+            ..FaultSpec::default()
+        };
+        let run = |spec| {
+            let (f, b, mut x) = op(spec);
+            for _ in 0..20 {
+                let _ = f.apply(&b, &mut x);
+                x.fill(0.0);
+            }
+            f.faults()
+        };
+        let a = run(spec);
+        let b = run(spec);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.len() <= 4, "max_faults respected");
+        assert!(a.iter().all(|e| e.apply_index > 3), "armed_after respected");
+        assert!(!a.is_empty(), "faults do fire at these rates over 17 applies");
+    }
+}

@@ -1,0 +1,41 @@
+//! Resilience: breakdown detection, checkpoint/restart recovery,
+//! backend degradation and fault injection.
+//!
+//! The porting papers this repo reproduces are blunt about immature
+//! device stacks: kernels fail transiently, numerics go bad silently,
+//! and a math library that only benchmarks — never recovers — cannot
+//! serve real traffic. This subsystem layers four defenses over the
+//! solver stack:
+//!
+//! * **Detection** ([`detect`]): every Krylov driver feeds its
+//!   recurrence scalars and residual norms through a
+//!   [`BreakdownDetector`]; NaN/Inf residuals, collapsed denominators
+//!   and stagnation surface as structured
+//!   [`StopStatus::Diverged`](crate::stop::StopStatus) results instead
+//!   of spinning to `max_iters`.
+//! * **Recovery** ([`recover`]): [`ResilientSolver`] checkpoints the
+//!   iterate every `checkpoint_every` iterations, verifies the *true*
+//!   residual `||b - A x||` at each checkpoint (catching recurrence
+//!   drift from silent corruption), rolls back on breakdown and falls
+//!   back along a solver chain (CG → BiCGSTAB → GMRES by default).
+//! * **Backend degradation** ([`retry`]): xla artifact dispatch is
+//!   retried with backoff; a [`CircuitBreaker`] flips the runtime into
+//!   degraded mode after repeated failures, after which kernels route
+//!   to the host `par` implementations (the data is always resident on
+//!   host — see `DESIGN.md`).
+//! * **Fault injection** ([`inject`]): [`FaultyOp`] wraps any operator
+//!   and injects NaN payloads, bit-flips and transient errors from a
+//!   seedable PRNG, so all of the above is testable in CI without
+//!   flaky hardware.
+
+pub mod detect;
+pub mod inject;
+pub mod recover;
+pub mod retry;
+
+pub use detect::{BreakdownDetector, BreakdownPolicy};
+pub use inject::{FaultEvent, FaultKind, FaultSpec, FaultyOp};
+pub use recover::{
+    RecoveryEvent, RecoveryPolicy, ResilientSolver, SolveOutcome, SolverKind,
+};
+pub use retry::{CircuitBreaker, RetryPolicy};

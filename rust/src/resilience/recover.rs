@@ -1,0 +1,575 @@
+//! Recovery policies: [`ResilientSolver`] wraps the plain Krylov
+//! drivers with checkpoint/restart, true-residual verification and a
+//! solver fallback chain.
+//!
+//! The wrapper runs its inner solver in *segments* of
+//! `checkpoint_every` iterations. Each segment boundary doubles as the
+//! true-residual recompute cadence: the recurrence residual the inner
+//! solver reports is cross-checked against `||b - A x||` computed on
+//! host data, which is what catches silent corruption (bit-flips) that
+//! the recurrence happily propagates. On breakdown, transient failure
+//! or a stagnant/worsened segment, the iterate is rolled back to the
+//! last verified checkpoint and the solve restarts; after
+//! `max_restarts` rollbacks the next solver in the chain takes over
+//! from the checkpoint.
+
+use crate::core::error::{Result, SparkleError};
+use crate::core::linop::LinOp;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+use crate::solver::{
+    BiCgStab, Cg, Cgs, Fcg, Gmres, Richardson, SolveResult, Solver, SolverConfig,
+};
+use crate::stop::{Breakdown, Criterion, StopStatus};
+
+use super::detect::BreakdownPolicy;
+
+/// Buildable solver identities for the fallback chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverKind {
+    /// Conjugate Gradient (SPD systems).
+    Cg,
+    /// Flexible CG.
+    Fcg,
+    /// BiCGSTAB (general systems).
+    BiCgStab,
+    /// CGS (general systems).
+    Cgs,
+    /// GMRES(m) with the given restart length.
+    Gmres { restart: usize },
+    /// Richardson with relaxation factor omega.
+    Richardson { omega: f64 },
+}
+
+impl SolverKind {
+    /// Solver name (matches each driver's `Solver::name`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cg => "cg",
+            SolverKind::Fcg => "fcg",
+            SolverKind::BiCgStab => "bicgstab",
+            SolverKind::Cgs => "cgs",
+            SolverKind::Gmres { .. } => "gmres",
+            SolverKind::Richardson { .. } => "richardson",
+        }
+    }
+
+    /// Instantiate the driver with the given config.
+    pub fn build<T: Value>(&self, config: SolverConfig) -> Box<dyn Solver<T>> {
+        match self {
+            SolverKind::Cg => Box::new(Cg::new(config)),
+            SolverKind::Fcg => Box::new(Fcg::new(config)),
+            SolverKind::BiCgStab => Box::new(BiCgStab::new(config)),
+            SolverKind::Cgs => Box::new(Cgs::new(config)),
+            SolverKind::Gmres { restart } => {
+                Box::new(Gmres::new(config).with_restart((*restart).max(1)))
+            }
+            SolverKind::Richardson { omega } => {
+                Box::new(Richardson::new(config, T::from_f64(*omega)))
+            }
+        }
+    }
+}
+
+/// Knobs of the recovery loop.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryPolicy {
+    /// Segment length: iterations between checkpoints, which is also
+    /// the true-residual recompute cadence.
+    pub checkpoint_every: usize,
+    /// Rollback-and-restart attempts per chain entry before falling
+    /// back to the next solver.
+    pub max_restarts: usize,
+    /// A segment counts as progress when its verified true residual
+    /// shrinks below `best * min_improvement` (slightly under 1.0 so
+    /// float noise does not count as progress).
+    pub min_improvement: f64,
+    /// Flag recurrence drift when `true_res > recurrence * drift_factor`.
+    pub drift_factor: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            checkpoint_every: 50,
+            max_restarts: 2,
+            min_improvement: 0.999,
+            drift_factor: 100.0,
+        }
+    }
+}
+
+/// What happened during a resilient solve, in order.
+#[derive(Debug, Clone)]
+pub enum RecoveryEvent {
+    /// Inner solver reported a structured breakdown; rolled back.
+    BreakdownRestart {
+        solver: &'static str,
+        breakdown: Breakdown,
+        at_iter: usize,
+    },
+    /// Inner solve (or residual verification) returned an error;
+    /// rolled back.
+    TransientRestart {
+        solver: &'static str,
+        error: String,
+    },
+    /// A segment finished without improving the true residual; rolled
+    /// back.
+    StagnationRestart {
+        solver: &'static str,
+        true_resnorm: f64,
+    },
+    /// The recurrence residual disagreed with the verified one by more
+    /// than `drift_factor` (silent corruption or lost orthogonality).
+    DriftDetected {
+        solver: &'static str,
+        recurrence: f64,
+        true_resnorm: f64,
+    },
+    /// Restarts exhausted; the next chain entry took over.
+    Fallback {
+        from: &'static str,
+        to: &'static str,
+    },
+}
+
+/// Structured outcome of a resilient solve.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// Aggregate result. `resnorm` here is the *verified* true residual
+    /// norm, and `status` carries the final breakdown when recovery was
+    /// exhausted.
+    pub result: SolveResult,
+    /// Chain entry that produced the final state.
+    pub solver: &'static str,
+    /// Verified `||b - A x||` of the returned iterate.
+    pub true_resnorm: f64,
+    /// Rollback-restarts performed (breakdown + transient + stagnation).
+    pub restarts: usize,
+    /// Chain fallbacks performed.
+    pub fallbacks: usize,
+    /// Full event log, in order.
+    pub events: Vec<RecoveryEvent>,
+}
+
+impl SolveOutcome {
+    /// Converged only after at least one recovery action.
+    pub fn recovered(&self) -> bool {
+        self.result.converged && !self.events.is_empty()
+    }
+}
+
+/// Fault-tolerant wrapper around the plain Krylov drivers.
+///
+/// ```
+/// # use sparkle::resilience::ResilientSolver;
+/// # use sparkle::stop::Criterion;
+/// let solver = ResilientSolver::new(Criterion::residual(1e-8, 2000));
+/// // solver.solve_outcome(&a, &b, &mut x)?
+/// ```
+#[derive(Debug, Clone)]
+pub struct ResilientSolver {
+    chain: Vec<SolverKind>,
+    criterion: Criterion,
+    policy: RecoveryPolicy,
+    breakdown: BreakdownPolicy,
+}
+
+impl ResilientSolver {
+    /// Default chain CG → BiCGSTAB → GMRES(30) with stagnation
+    /// detection enabled for the inner segments.
+    pub fn new(criterion: Criterion) -> Self {
+        Self {
+            chain: vec![
+                SolverKind::Cg,
+                SolverKind::BiCgStab,
+                SolverKind::Gmres { restart: 30 },
+            ],
+            criterion,
+            policy: RecoveryPolicy::default(),
+            breakdown: BreakdownPolicy {
+                stagnation_window: 25,
+                ..BreakdownPolicy::default()
+            },
+        }
+    }
+
+    /// Replace the fallback chain (must not be empty).
+    pub fn with_chain(mut self, chain: Vec<SolverKind>) -> Self {
+        assert!(!chain.is_empty(), "fallback chain must not be empty");
+        self.chain = chain;
+        self
+    }
+
+    /// Replace the recovery policy.
+    pub fn with_policy(mut self, policy: RecoveryPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Replace the breakdown-detection policy handed to inner solvers.
+    pub fn with_breakdown(mut self, breakdown: BreakdownPolicy) -> Self {
+        self.breakdown = breakdown;
+        self
+    }
+
+    fn converged(&self, true_res: f64, bnorm: f64) -> bool {
+        (self.criterion.rel_tol > 0.0 && true_res <= self.criterion.rel_tol * bnorm)
+            || (self.criterion.abs_tol > 0.0 && true_res <= self.criterion.abs_tol)
+    }
+
+    /// `||b - A x||` from host data. Retried a few times because with a
+    /// faulty operator the verification apply itself can fail
+    /// transiently or come back poisoned.
+    fn true_residual<T: Value>(
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &Dense<T>,
+    ) -> Result<f64> {
+        let once = |x: &Dense<T>| -> Result<f64> {
+            let mut r = b.clone();
+            a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
+            Ok(r.norm2_host())
+        };
+        let mut last: Result<f64> = Ok(f64::NAN);
+        for _ in 0..3 {
+            match once(x) {
+                Ok(v) if v.is_finite() => return Ok(v),
+                other => last = other,
+            }
+        }
+        last
+    }
+
+    /// Full recovery loop; returns the structured outcome (never an
+    /// error for numerical failures — those are in `result.status`).
+    pub fn solve_outcome<T: Value>(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveOutcome> {
+        a.check_conformant(b, x)?;
+        let bnorm = b.norm2_host();
+        let budget = if self.criterion.max_iters == 0 {
+            usize::MAX
+        } else {
+            self.criterion.max_iters
+        };
+        let seg = self.policy.checkpoint_every.max(1);
+
+        let mut events: Vec<RecoveryEvent> = Vec::new();
+        let mut total = 0usize;
+        let mut restarts = 0usize;
+        let mut last_breakdown: Option<Breakdown> = None;
+
+        // establish a verified starting checkpoint
+        let mut best_true = match Self::true_residual(a, b, x) {
+            Ok(v) if v.is_finite() => v,
+            _ => {
+                // the caller's initial guess is unverifiable — restart
+                // from zero, the one state we can always trust
+                x.fill(T::zero());
+                bnorm
+            }
+        };
+        let mut checkpoint = x.clone();
+
+        if self.converged(best_true, bnorm) {
+            return Ok(SolveOutcome {
+                result: SolveResult {
+                    iterations: 0,
+                    resnorm: best_true,
+                    converged: true,
+                    status: StopStatus::Converged,
+                    history: Vec::new(),
+                },
+                solver: self.chain[0].name(),
+                true_resnorm: best_true,
+                restarts: 0,
+                fallbacks: 0,
+                events,
+            });
+        }
+
+        let mut final_solver = self.chain[0].name();
+        let mut fallbacks = 0usize;
+
+        'chain: for (ci, kind) in self.chain.iter().enumerate() {
+            if ci > 0 {
+                events.push(RecoveryEvent::Fallback {
+                    from: self.chain[ci - 1].name(),
+                    to: kind.name(),
+                });
+                fallbacks = ci;
+            }
+            final_solver = kind.name();
+            let mut restarts_left = self.policy.max_restarts;
+
+            // every pass through this loop either consumes iteration
+            // budget (any Ok segment) or burns one of the bounded
+            // restarts, so the solve always terminates
+            loop {
+                if total >= budget {
+                    break 'chain;
+                }
+                let mut crit = self.criterion.clone();
+                crit.max_iters = seg.min(budget - total);
+                let mut cfg = SolverConfig::with_criterion(crit);
+                cfg.breakdown = self.breakdown;
+                let solver = kind.build::<T>(cfg);
+
+                // run one segment, classify it into either verified
+                // progress (continue), convergence (return), or a
+                // rollback event (fall through)
+                let rollback: RecoveryEvent = match solver.solve(a, b, x) {
+                    Err(e) => RecoveryEvent::TransientRestart {
+                        solver: kind.name(),
+                        error: e.to_string(),
+                    },
+                    Ok(r) => {
+                        total += r.iterations.max(1);
+                        match Self::true_residual(a, b, x) {
+                            Err(e) => RecoveryEvent::TransientRestart {
+                                solver: kind.name(),
+                                error: e.to_string(),
+                            },
+                            Ok(tr) if !tr.is_finite() => {
+                                // the iterate itself is poisoned
+                                let bd = r.breakdown().unwrap_or(Breakdown::NanResidual);
+                                last_breakdown = Some(bd);
+                                RecoveryEvent::BreakdownRestart {
+                                    solver: kind.name(),
+                                    breakdown: bd,
+                                    at_iter: total,
+                                }
+                            }
+                            Ok(tr) => {
+                                if r.resnorm.is_finite()
+                                    && r.resnorm >= 0.0
+                                    && tr > r.resnorm * self.policy.drift_factor
+                                    && tr > self.criterion.abs_tol
+                                {
+                                    events.push(RecoveryEvent::DriftDetected {
+                                        solver: kind.name(),
+                                        recurrence: r.resnorm,
+                                        true_resnorm: tr,
+                                    });
+                                }
+                                // convergence is only ever declared on
+                                // the verified residual — a lying
+                                // recurrence cannot produce a silent
+                                // wrong answer here
+                                if self.converged(tr, bnorm) {
+                                    return Ok(SolveOutcome {
+                                        result: SolveResult {
+                                            iterations: total,
+                                            resnorm: tr,
+                                            converged: true,
+                                            status: StopStatus::Converged,
+                                            history: r.history,
+                                        },
+                                        solver: kind.name(),
+                                        true_resnorm: tr,
+                                        restarts,
+                                        fallbacks,
+                                        events,
+                                    });
+                                }
+                                if let Some(bd) = r.breakdown() {
+                                    last_breakdown = Some(bd);
+                                    // the iterate is finite; keep it as
+                                    // the checkpoint if it improved
+                                    if tr < best_true {
+                                        checkpoint.copy_from(x)?;
+                                        best_true = tr;
+                                    }
+                                    RecoveryEvent::BreakdownRestart {
+                                        solver: kind.name(),
+                                        breakdown: bd,
+                                        at_iter: total,
+                                    }
+                                } else if tr < best_true * self.policy.min_improvement {
+                                    // verified progress: advance the
+                                    // checkpoint, no restart burned
+                                    checkpoint.copy_from(x)?;
+                                    best_true = tr;
+                                    continue;
+                                } else {
+                                    // a whole segment without progress
+                                    RecoveryEvent::StagnationRestart {
+                                        solver: kind.name(),
+                                        true_resnorm: tr,
+                                    }
+                                }
+                            }
+                        }
+                    }
+                };
+
+                // roll back to the last verified checkpoint and burn
+                // one restart; when exhausted, the next chain entry
+                // takes over from the same checkpoint
+                x.copy_from(&checkpoint)?;
+                events.push(rollback);
+                restarts += 1;
+                if restarts_left == 0 {
+                    continue 'chain;
+                }
+                restarts_left -= 1;
+            }
+        }
+
+        // recovery exhausted: hand back the best verified iterate
+        x.copy_from(&checkpoint)?;
+        let status = match last_breakdown {
+            Some(bd) => StopStatus::Diverged(bd),
+            None => StopStatus::BudgetExhausted,
+        };
+        Ok(SolveOutcome {
+            result: SolveResult {
+                iterations: total,
+                resnorm: best_true,
+                converged: false,
+                status,
+                history: Vec::new(),
+            },
+            solver: final_solver,
+            true_resnorm: best_true,
+            restarts,
+            fallbacks,
+            events,
+        })
+    }
+}
+
+impl<T: Value> Solver<T> for ResilientSolver {
+    /// [`solve_outcome`](ResilientSolver::solve_outcome) folded into the
+    /// common solver interface: a breakdown that survived all recovery
+    /// surfaces as [`SparkleError::Breakdown`]; plain budget exhaustion
+    /// stays an `Ok` non-converged result like every other driver.
+    fn solve(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        let outcome = self.solve_outcome(a, b, x)?;
+        if let StopStatus::Diverged(reason) = outcome.result.status {
+            return Err(SparkleError::Breakdown {
+                solver: "resilient",
+                iters: outcome.result.iterations,
+                resnorm: outcome.true_resnorm,
+                reason,
+            });
+        }
+        Ok(outcome.result)
+    }
+
+    fn name(&self) -> &'static str {
+        "resilient"
+    }
+
+    fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
+        self.chain[0]
+            .build::<T>(SolverConfig::default())
+            .flops_per_iter(nnz, n)
+    }
+
+    fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        self.chain[0]
+            .build::<T>(SolverConfig::default())
+            .bytes_per_iter(nnz, n, elem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::executor::Executor;
+    use crate::matrix::Csr;
+    use crate::testing::prng::Prng;
+    use crate::testing::prop::{gen_sparse, gen_vec};
+    use crate::Dim2;
+
+    fn spd(seed: u64, n: usize) -> (crate::MatrixData<f64>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut data = gen_sparse::<f64>(&mut rng, n, n, 3);
+        data.symmetrize();
+        data.shift_diagonal(1.0);
+        let b = gen_vec::<f64>(&mut rng, n);
+        (data, b)
+    }
+
+    #[test]
+    fn clean_solve_has_no_events() {
+        let (data, bv) = spd(71, 120);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(120, 1));
+        let solver = ResilientSolver::new(Criterion::residual(1e-9, 1000));
+        let out = solver.solve_outcome(&a, &b, &mut x).unwrap();
+        assert!(out.result.converged, "{out:?}");
+        assert!(out.events.is_empty(), "{:?}", out.events);
+        assert!(!out.recovered());
+        assert!(out.true_resnorm <= 1e-9 * b.norm2_host());
+        // and the iterate really solves the system
+        let mut r = b.clone();
+        a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
+        assert!(r.norm2_host() <= 1e-9 * b.norm2_host() * 1.01);
+    }
+
+    #[test]
+    fn fallback_chain_rescues_wrong_solver_choice() {
+        // Richardson with a hopeless omega diverges/stagnates; the
+        // chain falls back to BiCGSTAB which converges
+        let (data, bv) = spd(73, 100);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(100, 1));
+        let solver = ResilientSolver::new(Criterion::residual(1e-9, 2000))
+            .with_chain(vec![
+                SolverKind::Richardson { omega: 1.9 },
+                SolverKind::BiCgStab,
+            ]);
+        let out = solver.solve_outcome(&a, &b, &mut x).unwrap();
+        assert!(out.result.converged, "{out:?}");
+        assert_eq!(out.solver, "bicgstab");
+        assert!(out.fallbacks >= 1);
+        assert!(out
+            .events
+            .iter()
+            .any(|e| matches!(e, RecoveryEvent::Fallback { .. })));
+    }
+
+    #[test]
+    fn converged_initial_guess_short_circuits() {
+        let (data, bv) = spd(75, 80);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(80, 1));
+        let solver = ResilientSolver::new(Criterion::residual(1e-9, 1000));
+        solver.solve_outcome(&a, &b, &mut x).unwrap();
+        // second solve starts at the solution
+        let out = solver.solve_outcome(&a, &b, &mut x).unwrap();
+        assert!(out.result.converged);
+        assert_eq!(out.result.iterations, 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_is_ok_not_error() {
+        let (data, bv) = spd(77, 100);
+        let exec = Executor::reference();
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(100, 1));
+        let solver = ResilientSolver::new(Criterion::residual(1e-30, 12));
+        let r = Solver::<f64>::solve(&solver, &a, &b, &mut x).unwrap();
+        assert!(!r.converged);
+        assert_eq!(r.status, StopStatus::BudgetExhausted);
+    }
+}

@@ -1,0 +1,207 @@
+//! Transient-failure machinery for the ported backend: bounded
+//! retry-with-backoff around artifact dispatch and a circuit breaker
+//! that flips the runtime into degraded (host-fallback) mode after
+//! repeated failures.
+//!
+//! The split of responsibilities mirrors what the AMD/Intel porting
+//! papers report about immature device stacks: *transient* launch
+//! failures are worth a couple of retries, while a stack that keeps
+//! failing should be taken out of the dispatch path entirely rather
+//! than fail every solve iteration.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::core::error::Result;
+
+/// Bounded retry with exponential backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts (1 = no retry).
+    pub attempts: u32,
+    /// Sleep before the first retry.
+    pub base_backoff: Duration,
+    /// Backoff multiplier between consecutive retries.
+    pub multiplier: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 3,
+            base_backoff: Duration::from_millis(2),
+            multiplier: 2,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all — every failure is final.
+    pub fn none() -> Self {
+        Self {
+            attempts: 1,
+            ..Self::default()
+        }
+    }
+
+    /// Run `f` up to [`attempts`](Self::attempts) times, sleeping with
+    /// exponential backoff between attempts; returns the first success
+    /// or the last error.
+    pub fn run<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let attempts = self.attempts.max(1);
+        let mut backoff = self.base_backoff;
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => last_err = Some(e),
+            }
+            if attempt + 1 < attempts && !backoff.is_zero() {
+                std::thread::sleep(backoff);
+                backoff *= self.multiplier.max(1);
+            }
+        }
+        Err(last_err.expect("attempts >= 1 ran at least once"))
+    }
+}
+
+/// Trip-after-N-consecutive-failures circuit breaker.
+///
+/// All-atomic so it can sit behind the `Arc<XlaRuntime>` that every
+/// format/kernels handle shares. Once open it stays open (the PJRT
+/// runtime has no health probe to close it again); callers route
+/// around the backend via [`is_open`](Self::is_open).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    consecutive: AtomicU32,
+    failures_total: AtomicU64,
+    open: AtomicBool,
+}
+
+impl CircuitBreaker {
+    /// Breaker that opens after `threshold` consecutive failures
+    /// (`0` = never opens).
+    pub fn new(threshold: u32) -> Self {
+        Self {
+            threshold,
+            consecutive: AtomicU32::new(0),
+            failures_total: AtomicU64::new(0),
+            open: AtomicBool::new(false),
+        }
+    }
+
+    /// Record a failed dispatch (after retries were exhausted).
+    pub fn record_failure(&self) {
+        self.failures_total.fetch_add(1, Ordering::Relaxed);
+        let seen = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.threshold > 0 && seen >= self.threshold {
+            self.open.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a successful dispatch (resets the consecutive counter;
+    /// does not close an already-open breaker).
+    pub fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+    }
+
+    /// Whether the breaker has opened.
+    pub fn is_open(&self) -> bool {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Force the breaker open (tests, operator override).
+    pub fn trip(&self) {
+        self.open.store(true, Ordering::Relaxed);
+    }
+
+    /// Force the breaker closed and forget the failure streak.
+    pub fn reset(&self) {
+        self.open.store(false, Ordering::Relaxed);
+        self.consecutive.store(0, Ordering::Relaxed);
+    }
+
+    /// Total failures ever recorded.
+    pub fn failures_total(&self) -> u64 {
+        self.failures_total.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::error::SparkleError;
+    use std::cell::Cell;
+
+    fn flaky(fail_first: u32) -> impl FnMut() -> Result<u32> {
+        let calls = Cell::new(0u32);
+        move || {
+            let c = calls.get() + 1;
+            calls.set(c);
+            if c <= fail_first {
+                Err(SparkleError::Runtime(format!("transient #{c}")))
+            } else {
+                Ok(c)
+            }
+        }
+    }
+
+    #[test]
+    fn retry_recovers_from_transients() {
+        let p = RetryPolicy {
+            attempts: 3,
+            base_backoff: Duration::ZERO,
+            multiplier: 2,
+        };
+        assert_eq!(p.run(flaky(2)).unwrap(), 3);
+    }
+
+    #[test]
+    fn retry_surfaces_last_error() {
+        let p = RetryPolicy {
+            attempts: 2,
+            base_backoff: Duration::ZERO,
+            multiplier: 2,
+        };
+        let err = p.run(flaky(10)).unwrap_err();
+        assert!(err.to_string().contains("transient #2"));
+    }
+
+    #[test]
+    fn retry_none_is_single_shot() {
+        let mut calls = 0u32;
+        let _ = RetryPolicy::none().run(|| -> Result<()> {
+            calls += 1;
+            Err(SparkleError::Runtime("x".into()))
+        });
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_only() {
+        let b = CircuitBreaker::new(3);
+        b.record_failure();
+        b.record_failure();
+        b.record_success(); // streak broken
+        b.record_failure();
+        b.record_failure();
+        assert!(!b.is_open());
+        b.record_failure();
+        assert!(b.is_open());
+        assert_eq!(b.failures_total(), 5);
+        b.reset();
+        assert!(!b.is_open());
+    }
+
+    #[test]
+    fn zero_threshold_never_opens() {
+        let b = CircuitBreaker::new(0);
+        for _ in 0..100 {
+            b.record_failure();
+        }
+        assert!(!b.is_open());
+        b.trip();
+        assert!(b.is_open());
+    }
+}

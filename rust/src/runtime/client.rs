@@ -8,8 +8,13 @@ use std::sync::{Arc, Mutex};
 
 use crate::core::error::{Result, SparkleError};
 use crate::core::types::{Precision, Value};
+use crate::resilience::{CircuitBreaker, RetryPolicy};
 use crate::runtime::exec::Arg;
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Consecutive dispatch failures before the runtime degrades to the
+/// host fallback path.
+const BREAKER_THRESHOLD: u32 = 3;
 
 /// Owns the PJRT CPU client, the artifact manifest, and a cache of
 /// compiled executables keyed by artifact name. Compilation is lazy.
@@ -20,6 +25,13 @@ pub struct XlaRuntime {
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// Cumulative number of kernel launches (for perf accounting).
     launches: std::sync::atomic::AtomicU64,
+    /// Retry-with-backoff for the execute phase of a dispatch. Only
+    /// execution is retried: manifest lookups, HLO loads and compiles
+    /// are deterministic, so their failures are permanent.
+    retry: RetryPolicy,
+    /// Opens after repeated execute failures; kernels then route to
+    /// the host `par` implementations ([`XlaRuntime::degraded`]).
+    breaker: CircuitBreaker,
 }
 
 impl XlaRuntime {
@@ -35,7 +47,27 @@ impl XlaRuntime {
             manifest,
             cache: Mutex::new(HashMap::new()),
             launches: std::sync::atomic::AtomicU64::new(0),
+            retry: RetryPolicy::default(),
+            breaker: CircuitBreaker::new(BREAKER_THRESHOLD),
         })
+    }
+
+    /// Override the execute-phase retry policy.
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Whether the dispatch circuit breaker has opened — kernels should
+    /// route to the host fallback instead of this runtime.
+    pub fn degraded(&self) -> bool {
+        self.breaker.is_open()
+    }
+
+    /// The dispatch circuit breaker (inspection, tests, operator
+    /// override via `trip`/`reset`).
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
     }
 
     /// PJRT platform name (e.g. "cpu").
@@ -88,9 +120,20 @@ impl XlaRuntime {
         let exe = self.executable(name)?;
         self.launches
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut result = exe
-            .execute_b::<&xla::PjRtBuffer>(args)
-            .map_err(|e| SparkleError::Runtime(format!("execute_b {name}: {e:?}")))?[0][0]
+        let bufs = match self.retry.run(|| {
+            exe.execute_b::<&xla::PjRtBuffer>(args)
+                .map_err(|e| SparkleError::Runtime(format!("execute_b {name}: {e:?}")))
+        }) {
+            Ok(b) => {
+                self.breaker.record_success();
+                b
+            }
+            Err(e) => {
+                self.breaker.record_failure();
+                return Err(e);
+            }
+        };
+        let mut result = bufs[0][0]
             .to_literal_sync()
             .map_err(|e| SparkleError::Runtime(format!("fetch result: {e:?}")))?;
         let parts = result
@@ -140,9 +183,20 @@ impl XlaRuntime {
             .collect::<Result<Vec<_>>>()?;
         self.launches
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| SparkleError::Runtime(format!("execute {name}: {e:?}")))?[0][0]
+        let bufs = match self.retry.run(|| {
+            exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| SparkleError::Runtime(format!("execute {name}: {e:?}")))
+        }) {
+            Ok(b) => {
+                self.breaker.record_success();
+                b
+            }
+            Err(e) => {
+                self.breaker.record_failure();
+                return Err(e);
+            }
+        };
+        let mut result = bufs[0][0]
             .to_literal_sync()
             .map_err(|e| SparkleError::Runtime(format!("fetch result: {e:?}")))?;
         let parts = result

@@ -6,7 +6,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// BiCGSTAB solver.
@@ -33,6 +33,7 @@ impl<T: Value> Solver<T> for BiCgStab {
         let dim = x.shape();
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         let mut r = b.clone();
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
@@ -61,18 +62,28 @@ impl<T: Value> Solver<T> for BiCgStab {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
             }
             let rho_new = blas::dot(&exec, &rhat, &r)?;
+            // rho -> 0 is the classic Lanczos breakdown: beta and alpha
+            // both divide by it next
+            if let Some(bd) = det.scalar("rho", rho_new.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let beta = (rho_new / rho) * (alpha / omega);
             rho = rho_new;
             // p = r + beta * (p - omega * v)
             blas::axpy(&exec, -omega, &v, &mut p)?;
             blas::axpby(&exec, T::one(), &r, beta, &mut p)?;
             a.apply(&p, &mut v)?;
-            alpha = rho / blas::dot(&exec, &rhat, &v)?;
+            let rv = blas::dot(&exec, &rhat, &v)?;
+            if let Some(bd) = det.scalar("rhat·v", rv.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
+            alpha = rho / rv;
             // s = r - alpha v
             s.copy_from(&r)?;
             blas::axpy(&exec, -alpha, &v, &mut s)?;
@@ -83,6 +94,10 @@ impl<T: Value> Solver<T> for BiCgStab {
             } else {
                 blas::dot(&exec, &t, &s)? / tt
             };
+            // omega -> 0 stalls stabilization and divides beta next iter
+            if let Some(bd) = det.scalar("omega", omega.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             // x += alpha p + omega s
             blas::axpy(&exec, alpha, &p, x)?;
             blas::axpy(&exec, omega, &s, x)?;
@@ -93,6 +108,9 @@ impl<T: Value> Solver<T> for BiCgStab {
             iters += 1;
             if self.config.record_history {
                 history.push(resnorm);
+            }
+            if let Some(bd) = det.residual(resnorm) {
+                return Ok(diverged(iters, resnorm, history, bd));
             }
         }
     }

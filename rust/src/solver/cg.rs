@@ -10,7 +10,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// CG solver with optional preconditioner.
@@ -47,6 +47,7 @@ impl<T: Value> Solver<T> for Cg<T> {
         let dim = x.shape();
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         // r = b - A x
         let mut r = b.clone();
@@ -76,12 +77,16 @@ impl<T: Value> Solver<T> for Cg<T> {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
             }
             a.apply(&p, &mut q)?;
             let pq = blas::dot(&exec, &p, &q)?;
+            if let Some(bd) = det.scalar("p·Ap", pq.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let alpha = rz / pq;
             blas::axpy(&exec, alpha, &p, x)?;
             blas::axpy(&exec, -alpha, &q, &mut r)?;
@@ -90,6 +95,9 @@ impl<T: Value> Solver<T> for Cg<T> {
                 None => z.copy_from(&r)?,
             }
             let rz_new = blas::dot(&exec, &r, &z)?;
+            if let Some(bd) = det.scalar("rho", rz_new.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let beta = rz_new / rz;
             rz = rz_new;
             // p = z + beta p
@@ -98,6 +106,9 @@ impl<T: Value> Solver<T> for Cg<T> {
             iters += 1;
             if self.config.record_history {
                 history.push(resnorm);
+            }
+            if let Some(bd) = det.residual(resnorm) {
+                return Ok(diverged(iters, resnorm, history, bd));
             }
         }
     }

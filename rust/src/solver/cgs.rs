@@ -6,7 +6,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// CGS solver.
@@ -33,6 +33,7 @@ impl<T: Value> Solver<T> for Cgs {
         let dim = x.shape();
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         let mut r = b.clone();
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
@@ -61,11 +62,16 @@ impl<T: Value> Solver<T> for Cgs {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
             }
             let rho_new = blas::dot(&exec, &rhat, &r)?;
+            // rho -> 0: alpha = rho/sigma degenerates next
+            if let Some(bd) = det.scalar("rho", rho_new.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let beta = rho_new / rho;
             rho = rho_new;
             // u = r + beta q
@@ -76,6 +82,9 @@ impl<T: Value> Solver<T> for Cgs {
             blas::axpby(&exec, T::one(), &u, beta, &mut p)?;
             a.apply(&p, &mut vhat)?;
             let sigma = blas::dot(&exec, &rhat, &vhat)?;
+            if let Some(bd) = det.scalar("sigma", sigma.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let alpha = rho / sigma;
             // q = u - alpha vhat
             q.copy_from(&u)?;
@@ -91,6 +100,9 @@ impl<T: Value> Solver<T> for Cgs {
             iters += 1;
             if self.config.record_history {
                 history.push(resnorm);
+            }
+            if let Some(bd) = det.residual(resnorm) {
+                return Ok(diverged(iters, resnorm, history, bd));
             }
         }
     }

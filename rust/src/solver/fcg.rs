@@ -10,7 +10,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// Flexible CG solver.
@@ -47,6 +47,7 @@ impl<T: Value> Solver<T> for Fcg<T> {
         let dim = x.shape();
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         let mut r = b.clone();
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
@@ -76,12 +77,16 @@ impl<T: Value> Solver<T> for Fcg<T> {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
             }
             a.apply(&p, &mut q)?;
             let pq = blas::dot(&exec, &p, &q)?;
+            if let Some(bd) = det.scalar("p·Ap", pq.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let alpha = rz / pq;
             blas::axpy(&exec, alpha, &p, x)?;
             r_old.copy_from(&r)?;
@@ -92,6 +97,9 @@ impl<T: Value> Solver<T> for Fcg<T> {
             }
             // Polak-Ribière: beta = <r - r_old, z> / rz_old
             let rz_new = blas::dot(&exec, &r, &z)?;
+            if let Some(bd) = det.scalar("rho", rz_new.as_f64()) {
+                return Ok(diverged(iters, resnorm, history, bd));
+            }
             let r_old_z = blas::dot(&exec, &r_old, &z)?;
             let beta = (rz_new - r_old_z) / rz;
             rz = rz_new;
@@ -100,6 +108,9 @@ impl<T: Value> Solver<T> for Fcg<T> {
             iters += 1;
             if self.config.record_history {
                 history.push(resnorm);
+            }
+            if let Some(bd) = det.residual(resnorm) {
+                return Ok(diverged(iters, resnorm, history, bd));
             }
         }
     }

@@ -99,6 +99,7 @@ impl FusedCg {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     });
                 }

@@ -12,7 +12,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// GMRES solver with restart length `m`.
@@ -51,6 +51,7 @@ impl<T: Value> Solver<T> for Gmres {
         let m = self.restart;
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         let bnorm = blas::norm2(&exec, b)?.as_f64();
         let mut history = Vec::new();
@@ -77,6 +78,7 @@ impl<T: Value> Solver<T> for Gmres {
                         iterations: total_iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
@@ -137,6 +139,19 @@ impl<T: Value> Solver<T> for Gmres {
                     history.push(resnorm);
                 }
                 let status = crit.check(total_iters, resnorm, bnorm);
+                if let StopStatus::Diverged(bd) = status {
+                    // the Hessenberg column is poisoned; folding the
+                    // correction into x would corrupt the iterate —
+                    // return with x untouched so a checkpoint restart
+                    // can resume from it
+                    return Ok(diverged(total_iters, resnorm, history, bd));
+                }
+                if let Some(bd) = det.residual(resnorm) {
+                    // stagnation: the iterate is finite, so fold the
+                    // best correction so far before reporting
+                    update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
+                    return Ok(diverged(total_iters, resnorm, history, bd));
+                }
                 if status != StopStatus::Continue || wnorm.is_zero() {
                     // solve the j+1 upper-triangular system, update x
                     update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
@@ -145,13 +160,15 @@ impl<T: Value> Solver<T> for Gmres {
                             iterations: total_iters,
                             resnorm,
                             converged: true,
-                        history,
+                            status: StopStatus::Converged,
+                            history,
                         });
                     }
                     return Ok(SolveResult {
                         iterations: total_iters,
                         resnorm,
                         converged: false,
+                        status,
                         history,
                     });
                 }

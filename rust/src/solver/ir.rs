@@ -85,6 +85,7 @@ impl MixedIr {
                         iterations: outer,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }

@@ -31,7 +31,8 @@ pub use richardson::Richardson;
 use crate::core::error::Result;
 use crate::core::types::Value;
 use crate::matrix::dense::Dense;
-use crate::stop::Criterion;
+use crate::resilience::BreakdownPolicy;
+use crate::stop::{Breakdown, Criterion, StopStatus};
 
 /// Outcome of a solve.
 #[derive(Debug, Clone)]
@@ -42,8 +43,38 @@ pub struct SolveResult {
     pub resnorm: f64,
     /// Whether the stopping criterion was met by residual.
     pub converged: bool,
+    /// Why the solver stopped — [`StopStatus::Diverged`] carries the
+    /// structured breakdown reason.
+    pub status: StopStatus,
     /// Per-iteration residual norms (only if `record_history`).
     pub history: Vec<f64>,
+}
+
+impl SolveResult {
+    /// The breakdown reason, if the solve diverged.
+    pub fn breakdown(&self) -> Option<Breakdown> {
+        match self.status {
+            StopStatus::Diverged(bd) => Some(bd),
+            _ => None,
+        }
+    }
+}
+
+/// Construct the result for a detected breakdown (drivers return this
+/// the moment their iteration becomes unsalvageable).
+pub(crate) fn diverged(
+    iterations: usize,
+    resnorm: f64,
+    history: Vec<f64>,
+    breakdown: Breakdown,
+) -> SolveResult {
+    SolveResult {
+        iterations,
+        resnorm,
+        converged: false,
+        status: StopStatus::Diverged(breakdown),
+        history,
+    }
 }
 
 /// Configuration shared by all solvers.
@@ -53,6 +84,9 @@ pub struct SolverConfig {
     pub criterion: Criterion,
     /// Record the residual-norm history (costs one Vec push per iter).
     pub record_history: bool,
+    /// Breakdown-detection thresholds (NaN/Inf residuals are always
+    /// reported regardless of this policy).
+    pub breakdown: BreakdownPolicy,
 }
 
 impl Default for SolverConfig {
@@ -60,6 +94,7 @@ impl Default for SolverConfig {
         Self {
             criterion: Criterion::default(),
             record_history: false,
+            breakdown: BreakdownPolicy::default(),
         }
     }
 }
@@ -69,7 +104,7 @@ impl SolverConfig {
     pub fn with_criterion(criterion: Criterion) -> Self {
         Self {
             criterion,
-            record_history: false,
+            ..Self::default()
         }
     }
 }

@@ -9,7 +9,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// Richardson solver with relaxation factor `omega`.
@@ -48,6 +48,7 @@ impl<T: Value> Solver<T> for Richardson<T> {
         let dim = x.shape();
         let crit = self.config.criterion.started();
         let crit = &crit;
+        let mut det = self.config.breakdown.detector();
 
         let mut r = Dense::zeros(exec.clone(), dim);
         let mut z = Dense::zeros(exec.clone(), dim);
@@ -69,9 +70,15 @@ impl<T: Value> Solver<T> for Richardson<T> {
                         iterations: iters,
                         resnorm,
                         converged: status == StopStatus::Converged,
+                        status,
                         history,
                     })
                 }
+            }
+            // a stationary method diverges monotonically when omega is
+            // wrong for the spectrum — the stagnation window catches it
+            if let Some(bd) = det.residual(resnorm) {
+                return Ok(diverged(iters, resnorm, history, bd));
             }
             match &self.precond {
                 Some(m) => {

@@ -4,6 +4,37 @@
 //! [`Criterion`] that may combine an iteration budget with residual
 //! thresholds; the solver consults it once per iteration.
 
+/// Why a solver broke down (numerically diverged rather than merely
+/// running out of budget).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Breakdown {
+    /// The residual norm became NaN or infinite.
+    NanResidual,
+    /// A recurrence scalar (rho, omega, p·Ap, ...) became NaN/Inf.
+    NanOperand { what: &'static str },
+    /// A recurrence denominator collapsed to (near-)zero, so the next
+    /// update would divide by it.
+    ZeroDenominator { what: &'static str },
+    /// The residual made no meaningful progress over a full window of
+    /// iterations.
+    Stagnation { window: usize },
+}
+
+impl std::fmt::Display for Breakdown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Breakdown::NanResidual => write!(f, "residual norm is NaN/Inf"),
+            Breakdown::NanOperand { what } => write!(f, "recurrence scalar `{what}` is NaN/Inf"),
+            Breakdown::ZeroDenominator { what } => {
+                write!(f, "recurrence denominator `{what}` collapsed to zero")
+            }
+            Breakdown::Stagnation { window } => {
+                write!(f, "no residual progress over {window} iterations")
+            }
+        }
+    }
+}
+
 /// Why (or whether) a solver stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StopStatus {
@@ -13,6 +44,9 @@ pub enum StopStatus {
     Converged,
     /// Iteration budget exhausted without convergence.
     BudgetExhausted,
+    /// The iteration broke down numerically; the current iterate is not
+    /// trustworthy and further iterations cannot repair it.
+    Diverged(Breakdown),
 }
 
 /// Combined stopping criterion.
@@ -83,7 +117,15 @@ impl Criterion {
 
     /// Evaluate after `iters` completed iterations with residual `resnorm`
     /// and initial/rhs norm `bnorm`.
+    ///
+    /// NaN-safe: a NaN/Inf residual reports [`StopStatus::Diverged`]
+    /// before any threshold is consulted — NaN comparisons are all
+    /// false, so without this a poisoned solve would silently spin to
+    /// `max_iters` (or, worse, a NaN `bnorm` could mask convergence).
     pub fn check(&self, iters: usize, resnorm: f64, bnorm: f64) -> StopStatus {
+        if !resnorm.is_finite() {
+            return StopStatus::Diverged(Breakdown::NanResidual);
+        }
         let rel_hit = self.rel_tol > 0.0 && resnorm <= self.rel_tol * bnorm;
         let abs_hit = self.abs_tol > 0.0 && resnorm <= self.abs_tol;
         if rel_hit || abs_hit {
@@ -161,5 +203,40 @@ mod tests {
         let c = Criterion::residual(1e-6, 10);
         assert_eq!(c.check(10, 1e-9, 1.0), StopStatus::Converged);
         assert_eq!(c.check(10, 1.0, 1.0), StopStatus::BudgetExhausted);
+    }
+
+    #[test]
+    fn nan_residual_never_converges() {
+        let c = Criterion::residual(1e-6, 10);
+        assert_eq!(
+            c.check(1, f64::NAN, 1.0),
+            StopStatus::Diverged(Breakdown::NanResidual)
+        );
+        assert_eq!(
+            c.check(1, f64::INFINITY, 1.0),
+            StopStatus::Diverged(Breakdown::NanResidual)
+        );
+        // a NaN bnorm must not let a NaN resnorm through either
+        assert_eq!(
+            c.check(1, f64::NAN, f64::NAN),
+            StopStatus::Diverged(Breakdown::NanResidual)
+        );
+        // diverged outranks an exhausted budget
+        assert_eq!(
+            c.check(10, f64::NAN, 1.0),
+            StopStatus::Diverged(Breakdown::NanResidual)
+        );
+        // finite residuals are unaffected even with weird bnorm
+        assert_eq!(c.check(1, 1.0, f64::NAN), StopStatus::Continue);
+    }
+
+    #[test]
+    fn breakdown_displays() {
+        assert!(Breakdown::NanResidual.to_string().contains("NaN"));
+        assert!(Breakdown::NanOperand { what: "rho" }.to_string().contains("rho"));
+        assert!(Breakdown::ZeroDenominator { what: "omega" }
+            .to_string()
+            .contains("omega"));
+        assert!(Breakdown::Stagnation { window: 25 }.to_string().contains("25"));
     }
 }

@@ -2,4 +2,4 @@
 
 mod criterion;
 
-pub use criterion::{Criterion, StopStatus};
+pub use criterion::{Breakdown, Criterion, StopStatus};

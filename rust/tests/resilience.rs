@@ -1,0 +1,383 @@
+//! Fault-injection integration suite: every Krylov driver must survive
+//! injected NaN payloads, bit-flips and transient apply failures —
+//! either converging after recovery ([`ResilientSolver`]) or returning
+//! a structured breakdown/error. Never a panic, and never a silent
+//! wrong answer: whenever a solve claims convergence, the final iterate
+//! is re-verified against the *clean* operator here.
+//!
+//! All fault schedules are seeded, so failures reproduce exactly.
+
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::kernels::blas;
+use sparkle::matgen::stencil;
+use sparkle::matrix::{Csr, Dense};
+use sparkle::resilience::{
+    FaultSpec, FaultyOp, RecoveryPolicy, ResilientSolver, SolverKind,
+};
+use sparkle::solver::{Solver, SolverConfig};
+use sparkle::stop::{Criterion, StopStatus};
+use sparkle::testing::prng::Prng;
+use sparkle::testing::prop::{gen_sparse, gen_vec};
+use sparkle::{Dim2, MatrixData, SparkleError};
+
+/// Every buildable driver, exercised one by one.
+const ALL_KINDS: [SolverKind; 6] = [
+    SolverKind::Cg,
+    SolverKind::Fcg,
+    SolverKind::BiCgStab,
+    SolverKind::Cgs,
+    SolverKind::Gmres { restart: 20 },
+    SolverKind::Richardson { omega: 0.9 },
+];
+
+fn spd_system(seed: u64, n: usize) -> (MatrixData<f64>, Vec<f64>) {
+    let mut rng = Prng::new(seed);
+    let mut data = gen_sparse::<f64>(&mut rng, n, n, 3);
+    data.symmetrize();
+    data.shift_diagonal(2.0);
+    let b = gen_vec::<f64>(&mut rng, n);
+    (data, b)
+}
+
+/// `||b - A x||` against the *clean* operator — the arbiter for every
+/// convergence claim in this suite.
+fn clean_residual(a: &Csr<f64>, b: &Dense<f64>, x: &Dense<f64>) -> f64 {
+    let mut r = b.clone();
+    a.apply_advanced(-1.0, x, 1.0, &mut r).unwrap();
+    r.norm2_host()
+}
+
+/// NaN payloads must surface as a structured breakdown from every
+/// driver: `Ok` with `converged == false` and a `Diverged` status — no
+/// panic, no spinning to `max_iters` with a poisoned iterate.
+#[test]
+fn every_driver_reports_nan_injection_as_breakdown() {
+    let (data, bv) = spd_system(101, 100);
+    let exec = Executor::reference();
+    for kind in ALL_KINDS {
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let faulty = FaultyOp::new(
+            a,
+            FaultSpec {
+                seed: 7,
+                nan_prob: 1.0,
+                armed_after: 1,
+                ..FaultSpec::default()
+            },
+        );
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(100, 1));
+        let solver = kind.build::<f64>(SolverConfig::with_criterion(
+            Criterion::residual(1e-10, 200),
+        ));
+        let r = solver.solve(&faulty, &b, &mut x).unwrap();
+        assert!(!r.converged, "{}: converged on NaN data: {r:?}", kind.name());
+        assert!(
+            r.breakdown().is_some(),
+            "{}: no structured breakdown, status {:?} after {} iters",
+            kind.name(),
+            r.status,
+            r.iterations
+        );
+        // detection must fire promptly, not ride out the whole budget
+        assert!(r.iterations < 200, "{}: spun to max_iters", kind.name());
+    }
+}
+
+/// Transient apply failures must come back as structured errors from
+/// every driver — propagated, not panicked on.
+#[test]
+fn every_driver_propagates_transient_errors() {
+    let (data, bv) = spd_system(103, 80);
+    let exec = Executor::reference();
+    for kind in ALL_KINDS {
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let faulty = FaultyOp::new(
+            a,
+            FaultSpec {
+                seed: 9,
+                transient_prob: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(80, 1));
+        let solver = kind.build::<f64>(SolverConfig::with_criterion(
+            Criterion::residual(1e-10, 200),
+        ));
+        let err = solver.solve(&faulty, &b, &mut x).unwrap_err();
+        assert!(
+            err.to_string().contains("injected transient"),
+            "{}: unexpected error {err}",
+            kind.name()
+        );
+    }
+}
+
+/// Bit-flips are the nasty case: the iterate stays finite, the
+/// recurrence keeps "converging" — only the true-residual check at the
+/// checkpoint boundary can catch the corruption. The resilient wrapper
+/// must converge anyway, verified against the clean operator.
+#[test]
+fn resilient_solver_recovers_from_bitflips() {
+    let data = stencil::laplace_2d::<f64>(10, 10);
+    let exec = Executor::reference();
+    let clean = Csr::from_data(exec.clone(), &data).unwrap();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let faulty = FaultyOp::new(
+        a,
+        FaultSpec {
+            seed: 11,
+            bitflip_prob: 0.10,
+            max_faults: 3,
+            armed_after: 2,
+            ..FaultSpec::default()
+        },
+    );
+    let b = Dense::filled(exec.clone(), Dim2::new(100, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(100, 1));
+    let solver = ResilientSolver::new(Criterion::residual(1e-8, 5000)).with_policy(
+        RecoveryPolicy {
+            checkpoint_every: 20,
+            ..RecoveryPolicy::default()
+        },
+    );
+    let out = solver.solve_outcome(&faulty, &b, &mut x).unwrap();
+    assert!(out.result.converged, "{out:?}");
+    assert!(!faulty.faults().is_empty(), "no fault ever fired");
+    let res = clean_residual(&clean, &b, &x);
+    assert!(
+        res <= 1e-8 * b.norm2_host() * 10.0,
+        "silent wrong answer: clean residual {res:.3e}"
+    );
+}
+
+/// NaN payloads mid-solve: detection aborts the segment, rollback +
+/// restart carries the solve to convergence once the fault budget is
+/// spent.
+#[test]
+fn resilient_solver_recovers_from_nan_payloads() {
+    let (data, bv) = spd_system(107, 150);
+    let exec = Executor::reference();
+    let clean = Csr::from_data(exec.clone(), &data).unwrap();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let faulty = FaultyOp::new(
+        a,
+        FaultSpec {
+            seed: 13,
+            nan_prob: 0.05,
+            max_faults: 3,
+            armed_after: 5,
+            ..FaultSpec::default()
+        },
+    );
+    let b = Dense::vector(exec.clone(), &bv);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(150, 1));
+    let solver = ResilientSolver::new(Criterion::residual(1e-8, 5000)).with_policy(
+        RecoveryPolicy {
+            checkpoint_every: 25,
+            ..RecoveryPolicy::default()
+        },
+    );
+    let out = solver.solve_outcome(&faulty, &b, &mut x).unwrap();
+    assert!(out.result.converged, "{out:?}");
+    let res = clean_residual(&clean, &b, &x);
+    assert!(
+        res <= 1e-8 * b.norm2_host() * 10.0,
+        "silent wrong answer: clean residual {res:.3e}"
+    );
+}
+
+/// Transient faults during a solve roll back to the checkpoint and
+/// retry; the solve still converges and the event log records the
+/// recovery.
+#[test]
+fn resilient_solver_recovers_from_transients() {
+    let (data, bv) = spd_system(109, 120);
+    let exec = Executor::reference();
+    let clean = Csr::from_data(exec.clone(), &data).unwrap();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let faulty = FaultyOp::new(
+        a,
+        FaultSpec {
+            seed: 17,
+            transient_prob: 0.08,
+            max_faults: 4,
+            armed_after: 2,
+            ..FaultSpec::default()
+        },
+    );
+    let b = Dense::vector(exec.clone(), &bv);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(120, 1));
+    let solver = ResilientSolver::new(Criterion::residual(1e-8, 5000)).with_policy(
+        RecoveryPolicy {
+            checkpoint_every: 15,
+            ..RecoveryPolicy::default()
+        },
+    );
+    let out = solver.solve_outcome(&faulty, &b, &mut x).unwrap();
+    assert!(out.result.converged, "{out:?}");
+    assert!(!faulty.faults().is_empty(), "no fault ever fired");
+    let res = clean_residual(&clean, &b, &x);
+    assert!(res <= 1e-8 * b.norm2_host() * 10.0);
+}
+
+/// When every apply is poisoned, recovery is impossible — the `Solver`
+/// facade must return the structured breakdown error, never a silent
+/// non-answer.
+#[test]
+fn unrecoverable_corruption_is_a_structured_error() {
+    let (data, bv) = spd_system(113, 60);
+    let exec = Executor::reference();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let faulty = FaultyOp::new(
+        a,
+        FaultSpec {
+            seed: 19,
+            nan_prob: 1.0,
+            ..FaultSpec::default()
+        },
+    );
+    let b = Dense::vector(exec.clone(), &bv);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(60, 1));
+    let solver = ResilientSolver::new(Criterion::residual(1e-8, 300));
+    let err = Solver::<f64>::solve(&solver, &faulty, &b, &mut x).unwrap_err();
+    assert!(
+        matches!(err, SparkleError::Breakdown { solver: "resilient", .. }),
+        "expected structured breakdown, got {err}"
+    );
+}
+
+/// The acceptance sweep: the matgen suite under mixed injected faults.
+/// Every outcome must be either a convergence that the clean operator
+/// confirms, or a structured breakdown/budget status. Zero panics,
+/// zero silent wrong answers.
+#[test]
+fn matgen_suite_under_mixed_faults_has_no_silent_wrong_answers() {
+    let exec = Executor::reference();
+    let suite: Vec<(&str, MatrixData<f64>)> = vec![
+        ("laplace_2d", stencil::laplace_2d::<f64>(12, 12)),
+        ("stencil_3d", stencil::stencil_3d::<f64>(6, 6, 6, 0.0)),
+        ("random_spd", spd_system(211, 140).0),
+    ];
+    for (name, data) in &suite {
+        let n = data.dim.rows;
+        let clean = Csr::from_data(exec.clone(), data).unwrap();
+        for seed in [1u64, 2, 3] {
+            let a = Csr::from_data(exec.clone(), data).unwrap();
+            let faulty = FaultyOp::new(
+                a,
+                FaultSpec {
+                    seed,
+                    nan_prob: 0.02,
+                    bitflip_prob: 0.02,
+                    transient_prob: 0.02,
+                    max_faults: 4,
+                    armed_after: 3,
+                },
+            );
+            let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let solver = ResilientSolver::new(Criterion::residual(1e-8, 4000))
+                .with_policy(RecoveryPolicy {
+                    checkpoint_every: 25,
+                    ..RecoveryPolicy::default()
+                });
+            let out = solver.solve_outcome(&faulty, &b, &mut x).unwrap();
+            if out.result.converged {
+                let res = clean_residual(&clean, &b, &x);
+                assert!(
+                    res <= 1e-8 * b.norm2_host() * 10.0,
+                    "{name} seed {seed}: silent wrong answer, clean residual {res:.3e}"
+                );
+            } else {
+                assert!(
+                    matches!(
+                        out.result.status,
+                        StopStatus::Diverged(_) | StopStatus::BudgetExhausted
+                    ),
+                    "{name} seed {seed}: unstructured failure {:?}",
+                    out.result.status
+                );
+            }
+        }
+    }
+}
+
+/// Backend degradation: once the xla runtime's circuit breaker opens,
+/// BLAS and SpMV dispatch must route to the host `par` kernels and
+/// agree with the reference executor — the library keeps serving.
+#[test]
+fn degraded_xla_runtime_falls_back_to_host_kernels() {
+    // empty manifest: every xla dispatch fails while the breaker is
+    // closed (exactly the pre-existing failure-path contract) …
+    let exec = Executor::xla("/nonexistent_artifacts_dir").unwrap();
+    let reference = Executor::reference();
+    let (data, bv) = spd_system(301, 50);
+
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::vector(exec.clone(), &bv);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(50, 1));
+    assert!(a.apply(&b, &mut x).is_err(), "breaker closed: must error");
+    let mut y = Dense::vector(exec.clone(), &bv);
+    assert!(blas::axpy(&exec, 2.0, &b, &mut y).is_err());
+
+    // … until the breaker opens: same calls now run on the host path
+    let runtime = exec.xla_runtime().unwrap();
+    runtime.breaker().trip();
+    assert!(runtime.degraded());
+
+    a.apply(&b, &mut x).unwrap();
+    let ar = Csr::from_data(reference.clone(), &data).unwrap();
+    let br = Dense::vector(reference.clone(), &bv);
+    let mut xr = Dense::zeros(reference.clone(), Dim2::new(50, 1));
+    ar.apply(&br, &mut xr).unwrap();
+    for (got, want) in x.as_slice().iter().zip(xr.as_slice()) {
+        assert!((got - want).abs() <= 1e-13 * want.abs().max(1.0));
+    }
+
+    let mut y = Dense::vector(exec.clone(), &bv);
+    let mut x2 = Dense::zeros(exec.clone(), Dim2::new(50, 1));
+    blas::axpy(&exec, 2.0, &b, &mut y).unwrap();
+    blas::scal(&exec, 0.5, &mut y).unwrap();
+    let d = blas::dot(&exec, &y, &b).unwrap();
+    assert!(d.is_finite());
+    // a whole solve runs end-to-end on the degraded executor
+    let solver = SolverKind::Cg.build::<f64>(SolverConfig::with_criterion(
+        Criterion::residual(1e-8, 500),
+    ));
+    let r = solver.solve(&a, &b, &mut x2).unwrap();
+    assert!(r.converged, "degraded-mode CG: {r:?}");
+
+    // operator override: reset closes the breaker, xla errors return
+    runtime.breaker().reset();
+    assert!(!runtime.degraded());
+    assert!(a.apply(&b, &mut x).is_err());
+}
+
+/// A stagnating iteration (Richardson that makes no progress) must be
+/// cut short by the stagnation window, not ride out the whole budget.
+#[test]
+fn stagnation_window_cuts_hopeless_iteration_short() {
+    let (data, bv) = spd_system(401, 80);
+    let exec = Executor::reference();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::vector(exec.clone(), &bv);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(80, 1));
+    let mut cfg = SolverConfig::with_criterion(Criterion::residual(1e-12, 10_000));
+    cfg.breakdown.stagnation_window = 20;
+    // omega = 0: the iterate never moves, the residual never improves
+    let solver = SolverKind::Richardson { omega: 0.0 }.build::<f64>(cfg);
+    let r = solver.solve(&a, &b, &mut x).unwrap();
+    assert!(!r.converged);
+    assert!(
+        matches!(
+            r.breakdown(),
+            Some(sparkle::stop::Breakdown::Stagnation { .. })
+        ),
+        "expected stagnation, got {:?}",
+        r.status
+    );
+    assert!(r.iterations <= 50, "stagnated solve ran {} iters", r.iterations);
+}
