@@ -6,15 +6,19 @@
 //! (The XLA executor needs `make artifacts` once; the example skips it
 //! gracefully when artifacts are missing.)
 
+use std::sync::Arc;
+
 use sparkle::autotune::AutoMatrix;
 use sparkle::core::executor::Executor;
 use sparkle::core::linop::LinOp;
 use sparkle::matgen::stencil;
 use sparkle::matrix::{Coo, Csr, Dense, Ell};
+use sparkle::observe::{Profile, Record};
+use sparkle::perfmodel::Device;
 use sparkle::resilience::{FaultSpec, FaultyOp, ResilientSolver};
-use sparkle::solver::{Cg, Solver, SolverConfig};
+use sparkle::solver::{Cg, Solver, SolverBuilder, SolverConfig};
 use sparkle::stop::Criterion;
-use sparkle::Dim2;
+use sparkle::{Dim2, Precision};
 
 fn main() -> sparkle::Result<()> {
     // 1. assemble: a 2-D Poisson problem on a 32x32 grid
@@ -118,6 +122,33 @@ fn main() -> sparkle::Result<()> {
         println!("  recovery event: {event:?}");
     }
     assert!(outcome.result.converged);
+
+    // 7. observability: SolverBuilder is the unified entry point (it
+    //    subsumes steps 4-6: plain solve, solve_data, resilient), and
+    //    with_logger scopes an event logger to the solve. Aggregating
+    //    the recorded events against a device roofline yields a
+    //    per-kernel profile — the paper's VTune tables, in-library.
+    let rec = Arc::new(Record::new());
+    let mut xo = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let observed = SolverBuilder::cg()
+        .with_criterion(Criterion::residual(1e-10, 1000))
+        .with_logger(rec.clone())
+        .solve(&a, &b, &mut xo)?;
+    assert!(observed.converged);
+    let profile = Profile::from_events(&rec.events(), Device::Gen12, Precision::Double);
+    println!(
+        "profiled CG: {} events recorded, {} distinct kernels",
+        rec.len(),
+        profile.kernels.len()
+    );
+    profile.summary_table().print();
+    if let Some(eff) = profile.best_spmv_efficiency() {
+        println!(
+            "best SpMV roofline efficiency vs {}: {eff:.3}",
+            profile.device.spec().name
+        );
+    }
+
     println!("quickstart OK");
     Ok(())
 }

@@ -6,14 +6,19 @@
 //!
 //! The optional argument picks a Table-1 matrix (default: thermal2).
 
+use std::sync::Arc;
+
 use sparkle::autotune::AutoMatrix;
 use sparkle::bench_util::{f2, Table, Timer};
 use sparkle::core::executor::Executor;
 use sparkle::core::linop::LinOp;
 use sparkle::matgen::{suite, MatrixStats};
 use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::observe::{Profile, Record};
 use sparkle::perfmodel::project::Implementation;
 use sparkle::perfmodel::{project_spmv, Device, SpmvKernelKind};
+use sparkle::solver::SolverBuilder;
+use sparkle::stop::Criterion;
 use sparkle::vendor_mkl::VendorCsr;
 use sparkle::Dim2;
 
@@ -104,6 +109,33 @@ fn main() -> sparkle::Result<()> {
         ]);
     }
     t2.print();
+
+    // Profiled solve walkthrough: the survey above times SpMV in
+    // isolation; here a whole solve runs under an event logger, and
+    // the same roofline machinery scores every kernel it dispatched —
+    // measured efficiency next to the projections just printed.
+    println!("\n-- profiled solve (observe): BiCGSTAB on the par executor --");
+    let exec = Executor::par();
+    let b = Dense::filled(exec.clone(), Dim2::new(stats.n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(stats.n, 1));
+    let rec = Arc::new(Record::new());
+    let result = SolverBuilder::bicgstab()
+        .with_criterion(Criterion::residual(1e-6, 2000))
+        .with_logger(rec.clone())
+        .solve_data(&exec, &data, &b, &mut x)?;
+    let profile = Profile::from_events(&rec.events(), Device::Gen12, sparkle::Precision::Double);
+    profile.summary_table().print();
+    println!(
+        "converged={} in {} iterations ({} events); best measured SpMV efficiency vs {}: {}",
+        result.converged,
+        result.iterations,
+        rec.len(),
+        Device::Gen12.spec().name,
+        profile
+            .best_spmv_efficiency()
+            .map_or("n/a".to_string(), |e| format!("{e:.3}")),
+    );
+
     println!("\nspmv_survey OK");
     Ok(())
 }

@@ -1,0 +1,75 @@
+//! Profiling smoke bench: run one instrumented CG solve on the host
+//! `par` executor, stream every event to `BENCH_observe.jsonl`, and
+//! write the aggregated roofline [`Profile`] to `BENCH_observe.json`.
+//!
+//! Acceptance: the solve converges and the profile reports SpMV
+//! roofline efficiency in (0, 1] against the GEN12 device model —
+//! exits non-zero otherwise so CI can gate on it.
+
+use std::sync::Arc;
+
+use sparkle::bench_util::bench_scale;
+use sparkle::core::executor::Executor;
+use sparkle::core::types::Precision;
+use sparkle::matgen::stencil;
+use sparkle::observe::{JsonlLogger, Logger as _, Profile, Record};
+use sparkle::perfmodel::Device;
+use sparkle::solver::SolverBuilder;
+use sparkle::stop::Criterion;
+use sparkle::{Dense, Dim2};
+
+const JSON_PATH: &str = "BENCH_observe.json";
+const JSONL_PATH: &str = "BENCH_observe.jsonl";
+
+fn main() {
+    let side = bench_scale().max(16);
+    let data = stencil::laplace_2d::<f64>(side, side);
+    let n = data.dim.rows;
+    println!("== Profiled CG solve (laplace_2d {side}x{side}, n={n}, par executor) ==\n");
+
+    let exec = Executor::par();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let rec = Arc::new(Record::new());
+    let result = SolverBuilder::cg()
+        .with_criterion(Criterion::residual(1e-8, 2000))
+        .with_logger(rec.clone())
+        .solve_data(&exec, &data, &b, &mut x)
+        .expect("instrumented solve failed");
+    println!(
+        "converged: {} in {} iterations (resnorm {:.3e})\n",
+        result.converged, result.iterations, result.resnorm
+    );
+
+    // stream the raw event log (the JSON-lines artifact)
+    let events = rec.events();
+    let jsonl = JsonlLogger::to_file(JSONL_PATH).expect("create BENCH_observe.jsonl");
+    for e in &events {
+        jsonl.log(e);
+    }
+    jsonl.flush().expect("flush BENCH_observe.jsonl");
+
+    // aggregate against the paper's GEN12 roofline
+    let profile = Profile::from_events(&events, Device::Gen12, Precision::Double);
+    profile.summary_table().print();
+
+    let eff = profile.best_spmv_efficiency();
+    match eff {
+        Some(e) => println!(
+            "\nbest SpMV roofline efficiency vs {}: {e:.3}",
+            profile.device.spec().name
+        ),
+        None => println!("\nno SpMV kernels observed"),
+    }
+    let pass = result.converged && matches!(eff, Some(e) if e > 0.0 && e <= 1.0);
+    println!(
+        "acceptance (converged && SpMV efficiency in (0,1]): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    profile.write_json(JSON_PATH).expect("write BENCH_observe.json");
+    println!("wrote {JSON_PATH} and {JSONL_PATH} ({} events)", events.len());
+    if !pass {
+        std::process::exit(1);
+    }
+}

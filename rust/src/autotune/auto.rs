@@ -36,6 +36,17 @@ pub enum ChoiceSource {
     Prior,
 }
 
+impl ChoiceSource {
+    /// Lowercase tag used in telemetry events and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ChoiceSource::Cache => "cache",
+            ChoiceSource::Measured => "measured",
+            ChoiceSource::Prior => "prior",
+        }
+    }
+}
+
 /// Selection configuration.
 #[derive(Debug, Clone)]
 pub struct AutoConfig {
@@ -138,6 +149,12 @@ impl<T: Value> AutoMatrix<T> {
 
         if let Some(hit) = cache.get(&key) {
             if prior::supported_on(&exec, hit.format) {
+                let (fmt, us) = (hit.format, hit.us_per_apply);
+                crate::observe::emit(|| crate::observe::Event::AutotuneDecision {
+                    format: fmt.name().to_string(),
+                    source: ChoiceSource::Cache.name().to_string(),
+                    predicted_us: us,
+                });
                 let inner = build_inner(exec.clone(), data, hit.format)?;
                 let report = AutoReport {
                     features,
@@ -189,6 +206,12 @@ impl<T: Value> AutoMatrix<T> {
                 candidates[0].predicted_us,
             )
         };
+
+        crate::observe::emit(|| crate::observe::Event::AutotuneDecision {
+            format: chosen.name().to_string(),
+            source: source.name().to_string(),
+            predicted_us: us,
+        });
 
         if source == ChoiceSource::Measured {
             cache.put(

@@ -157,11 +157,17 @@ pub fn measure_formats<T: Value>(
         if !x.as_slice().iter().all(|v| v.as_f64().is_finite()) {
             continue;
         }
-        out.push(Measurement {
+        let m = Measurement {
             format,
             seconds: Stats::from_samples(&samples),
             applies,
+        };
+        crate::observe::emit(|| crate::observe::Event::AutotuneCandidate {
+            format: format.name().to_string(),
+            median_us: m.median_us(),
+            applies: m.applies,
         });
+        out.push(m);
     }
     out.sort_by(|a, b| {
         a.seconds

@@ -10,11 +10,21 @@ pub struct Stats {
 }
 
 impl Stats {
-    /// Compute from raw samples. Panics on empty input.
+    /// Compute from raw samples. Non-finite samples (a poisoned timer,
+    /// an overflowed subtraction) are dropped first; an empty or
+    /// all-non-finite input yields the all-zero `Stats` rather than a
+    /// panic or NaN medians, so zero-rep timer configs stay harmless.
     pub fn from_samples(samples: &[f64]) -> Self {
-        assert!(!samples.is_empty(), "Stats::from_samples(empty)");
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|v| v.is_finite()).collect();
+        if sorted.is_empty() {
+            return Stats {
+                min: 0.0,
+                median: 0.0,
+                mean: 0.0,
+                max: 0.0,
+            };
+        }
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let median = if n % 2 == 1 {
             sorted[n / 2]
@@ -31,8 +41,14 @@ impl Stats {
 
     /// Derived throughput for `units` of work per run (e.g. bytes ->
     /// GB/s, flops -> GFLOP/s), using the mean time as the paper does.
+    /// A degenerate (zero-mean) sample set reports 0 rather than
+    /// dividing by zero.
     pub fn rate_giga(&self, units: f64) -> f64 {
-        units / self.mean / 1e9
+        if self.mean > 0.0 {
+            units / self.mean / 1e9
+        } else {
+            0.0
+        }
     }
 }
 
@@ -59,5 +75,29 @@ mod tests {
     fn rates() {
         let s = Stats::from_samples(&[0.5]);
         assert_eq!(s.rate_giga(1e9), 2.0); // 1 G-unit in 0.5s = 2 G/s
+    }
+
+    #[test]
+    fn empty_input_is_all_zero_not_a_panic() {
+        let s = Stats::from_samples(&[]);
+        assert_eq!(s, Stats { min: 0.0, median: 0.0, mean: 0.0, max: 0.0 });
+        assert_eq!(s.rate_giga(1e9), 0.0); // no division by zero either
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let s = Stats::from_samples(&[f64::NAN, 2.0, f64::INFINITY, 4.0, f64::NEG_INFINITY]);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn all_non_finite_degrades_to_zero() {
+        let s = Stats::from_samples(&[f64::NAN, f64::INFINITY]);
+        assert_eq!(s.median, 0.0);
+        assert!(s.median.is_finite());
+        assert_eq!(s.rate_giga(1e9), 0.0);
     }
 }

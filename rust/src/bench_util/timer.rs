@@ -62,4 +62,14 @@ mod tests {
         let s = time_secs(|| std::thread::sleep(std::time::Duration::from_millis(2)));
         assert!(s >= 0.002);
     }
+
+    #[test]
+    fn zero_rep_config_still_yields_finite_stats() {
+        let mut calls = 0usize;
+        let stats = Timer::new(0, 0).run(|| calls += 1);
+        assert_eq!(calls, 1, "reps clamp to at least one timed run");
+        assert!(stats.median.is_finite());
+        assert!(stats.mean.is_finite());
+        assert!(stats.rate_giga(1e9).is_finite());
+    }
 }

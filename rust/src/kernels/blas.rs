@@ -15,6 +15,7 @@ use crate::core::executor::{Executor, ParConfig};
 use crate::core::types::Value;
 use crate::kernels::{par, reference, xla};
 use crate::matrix::dense::Dense;
+use crate::observe;
 
 fn check_same_len<T: Value>(op: &'static str, x: &Dense<T>, y: &Dense<T>) -> Result<()> {
     if x.shape() != y.shape() {
@@ -26,9 +27,26 @@ fn check_same_len<T: Value>(op: &'static str, x: &Dense<T>, y: &Dense<T>) -> Res
     Ok(())
 }
 
+/// Observe guard with the textbook BLAS-1 model: `flops_per_elem * n`
+/// flops and `streams * n * sizeof(T)` useful bytes (one stream per
+/// vector read or written).
+#[inline]
+fn guard<T: Value>(
+    name: &'static str,
+    exec: &Arc<Executor>,
+    flops_per_elem: f64,
+    streams: f64,
+    n: usize,
+) -> Option<observe::KernelGuard> {
+    let n = n as f64;
+    let elem = T::PRECISION.bytes() as f64;
+    observe::blas_guard(name, exec.name(), flops_per_elem * n, streams * elem * n)
+}
+
 /// y += alpha * x.
 pub fn axpy<T: Value>(exec: &Arc<Executor>, alpha: T, x: &Dense<T>, y: &mut Dense<T>) -> Result<()> {
     check_same_len("axpy", x, y)?;
+    let _obs = guard::<T>("axpy", exec, 2.0, 3.0, x.len());
     match &**exec {
         Executor::Reference => reference::axpy(alpha, x.as_slice(), y.as_mut_slice()),
         Executor::Par(cfg) => par::axpy(cfg, alpha, x.as_slice(), y.as_mut_slice()),
@@ -52,6 +70,7 @@ pub fn axpby<T: Value>(
     y: &mut Dense<T>,
 ) -> Result<()> {
     check_same_len("axpby", x, y)?;
+    let _obs = guard::<T>("axpby", exec, 3.0, 3.0, x.len());
     match &**exec {
         Executor::Reference => reference::axpby(alpha, x.as_slice(), beta, y.as_mut_slice()),
         Executor::Par(cfg) => par::axpby(cfg, alpha, x.as_slice(), beta, y.as_mut_slice()),
@@ -74,6 +93,7 @@ pub fn axpby<T: Value>(
 
 /// x *= beta.
 pub fn scal<T: Value>(exec: &Arc<Executor>, beta: T, x: &mut Dense<T>) -> Result<()> {
+    let _obs = guard::<T>("scal", exec, 1.0, 2.0, x.len());
     match &**exec {
         Executor::Reference => reference::scal(beta, x.as_mut_slice()),
         Executor::Par(cfg) => par::scal(cfg, beta, x.as_mut_slice()),
@@ -91,6 +111,7 @@ pub fn scal<T: Value>(exec: &Arc<Executor>, beta: T, x: &mut Dense<T>) -> Result
 /// Dot product of two equally-shaped dense objects (flattened).
 pub fn dot<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result<T> {
     check_same_len("dot", x, y)?;
+    let _obs = guard::<T>("dot", exec, 2.0, 2.0, x.len());
     Ok(match &**exec {
         Executor::Reference => reference::dot(x.as_slice(), y.as_slice()),
         Executor::Par(cfg) => par::dot(cfg, x.as_slice(), y.as_slice()),
@@ -106,6 +127,7 @@ pub fn dot<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result
 
 /// Euclidean norm.
 pub fn norm2<T: Value>(exec: &Arc<Executor>, x: &Dense<T>) -> Result<T> {
+    let _obs = guard::<T>("norm2", exec, 2.0, 1.0, x.len());
     Ok(match &**exec {
         Executor::Reference => reference::norm2(x.as_slice()),
         Executor::Par(cfg) => par::norm2(cfg, x.as_slice()),
@@ -128,6 +150,7 @@ pub fn ew_mul<T: Value>(
 ) -> Result<()> {
     check_same_len("ew_mul", x, y)?;
     check_same_len("ew_mul", x, z)?;
+    let _obs = guard::<T>("ew_mul", exec, 1.0, 3.0, x.len());
     match &**exec {
         Executor::Reference => reference::ew_mul(x.as_slice(), y.as_slice(), z.as_mut_slice()),
         Executor::Par(cfg) => par::ew_mul(cfg, x.as_slice(), y.as_slice(), z.as_mut_slice()),

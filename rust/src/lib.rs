@@ -18,6 +18,10 @@
 //!   ([`ResilientSolver`]), backend degradation (retry + circuit
 //!   breaker, xla → par fallback) and a seedable fault-injection
 //!   harness.
+//! * **observe** — Ginkgo-style Logger/Event telemetry: zero-cost-
+//!   when-disabled kernel timers, solver/resilience/autotune events,
+//!   JSON-lines and in-memory sinks, and a [`Profile`](observe::Profile)
+//!   report with per-kernel roofline efficiency.
 //! * **perfmodel** — calibrated roofline models of the paper's GPUs
 //!   (GEN9, GEN12, V100, RadeonVII): the testbed substitute.
 //! * **matgen / io** — SuiteSparse-like synthetic matrices + MatrixMarket.
@@ -34,6 +38,7 @@ pub mod io;
 pub mod kernels;
 pub mod matgen;
 pub mod matrix;
+pub mod observe;
 pub mod perfmodel;
 pub mod precond;
 pub mod resilience;
@@ -52,3 +57,4 @@ pub use crate::core::matrix_data::MatrixData;
 pub use crate::core::types::{IndexType, Precision, Value};
 pub use crate::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
 pub use crate::resilience::ResilientSolver;
+pub use crate::solver::SolverBuilder;

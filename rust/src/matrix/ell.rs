@@ -153,6 +153,11 @@ impl<T: Value> LinOp<T> for Ell<T> {
         crate::kernels::spmv::ell_apply(&self.exec, self, b, x)
     }
 
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::ell_apply_advanced(&self.exec, alpha, self, beta, b, x)
+    }
+
     fn op_name(&self) -> &'static str {
         "ell"
     }

@@ -168,6 +168,11 @@ impl<T: Value> LinOp<T> for SellP<T> {
         crate::kernels::spmv::sellp_apply(&self.exec, self, b, x)
     }
 
+    fn apply_advanced(&self, alpha: T, b: &Dense<T>, beta: T, x: &mut Dense<T>) -> Result<()> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::sellp_apply_advanced(&self.exec, alpha, self, beta, b, x)
+    }
+
     fn op_name(&self) -> &'static str {
         "sellp"
     }

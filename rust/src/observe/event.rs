@@ -1,0 +1,498 @@
+//! Event taxonomy and the [`Logger`] trait.
+//!
+//! Every instrumented layer reports through the same flat [`Event`]
+//! enum so one sink sees the whole story of a solve: kernel launches
+//! with their flop/byte models, solver iterations, recovery actions,
+//! autotune decisions and runtime dispatch health. Events are plain
+//! data (`Clone + PartialEq`) and serialize to single JSON lines via
+//! [`Event::to_json_line`]; [`Event::from_json_line`] parses exactly
+//! that format back, which is what makes the JSON-lines sink
+//! round-trippable in tests.
+
+/// Coarse kernel family, used to group per-kernel counters into
+/// per-phase breakdowns in [`Profile`](crate::observe::Profile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// Sparse matrix-vector products (`kernels/spmv.rs`).
+    Spmv,
+    /// BLAS-1 vector operations (`kernels/blas.rs`).
+    Blas,
+    /// Ported-backend artifact launches (`runtime/client.rs`).
+    Runtime,
+}
+
+impl KernelClass {
+    /// Lowercase tag used in JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelClass::Spmv => "spmv",
+            KernelClass::Blas => "blas",
+            KernelClass::Runtime => "runtime",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "spmv" => Some(KernelClass::Spmv),
+            "blas" => Some(KernelClass::Blas),
+            "runtime" => Some(KernelClass::Runtime),
+            _ => None,
+        }
+    }
+}
+
+/// One observation from an instrumented code path.
+///
+/// String fields are owned so parsed events compare equal to emitted
+/// ones; the allocation only happens when a logger is enabled (the
+/// disabled path never constructs an `Event` at all).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A timed kernel began (paired with a following `KernelStop`).
+    KernelStart { class: KernelClass, name: String },
+    /// A timed kernel finished. `flops`/`bytes` are the useful-work
+    /// model from `perfmodel::traffic` (SpMV) or the textbook BLAS-1
+    /// footprint, which is what the roofline efficiency is computed
+    /// against.
+    KernelStop {
+        class: KernelClass,
+        name: String,
+        exec: String,
+        seconds: f64,
+        flops: f64,
+        bytes: f64,
+    },
+    /// A builder-driven solve began.
+    SolverStart { solver: String, rows: usize },
+    /// One Krylov iteration completed with the given recurrence
+    /// residual norm.
+    SolverIteration {
+        solver: String,
+        iteration: usize,
+        resnorm: f64,
+    },
+    /// A builder-driven solve finished.
+    SolverDone {
+        solver: String,
+        iterations: usize,
+        converged: bool,
+        resnorm: f64,
+    },
+    /// `ResilientSolver` advanced its verified checkpoint.
+    Checkpoint {
+        solver: String,
+        at_iter: usize,
+        true_resnorm: f64,
+    },
+    /// `ResilientSolver` rolled back to the last checkpoint.
+    Rollback { solver: String, reason: String },
+    /// The recurrence residual drifted away from the verified one.
+    Drift {
+        solver: String,
+        recurrence: f64,
+        true_resnorm: f64,
+    },
+    /// The fallback chain moved to its next solver.
+    Fallback { from: String, to: String },
+    /// Autotune timed one candidate format.
+    AutotuneCandidate {
+        format: String,
+        median_us: f64,
+        applies: usize,
+    },
+    /// Autotune committed to a format.
+    AutotuneDecision {
+        format: String,
+        source: String,
+        predicted_us: f64,
+    },
+    /// One ported-backend artifact execution (after retries).
+    Launch {
+        artifact: String,
+        seconds: f64,
+        ok: bool,
+    },
+    /// One failed dispatch attempt inside the retry loop.
+    Retry { what: String, attempt: u32 },
+    /// The runtime circuit breaker opened (backend degraded to host).
+    BreakerOpen { failures: u64 },
+}
+
+/// Receiver for [`Event`]s. Implementations must be `Send + Sync`
+/// because the logger slot is global (kernels have no per-call context
+/// to thread a logger through).
+pub trait Logger: Send + Sync {
+    /// Handle one event. Called only while the logger is installed and
+    /// [`enabled`](Self::enabled).
+    fn log(&self, event: &Event);
+
+    /// Whether this logger wants events at all. Returning `false`
+    /// short-circuits the global emit path to a single relaxed atomic
+    /// load — no event is constructed, no allocation happens.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The do-nothing logger: installing it keeps the event path disabled,
+/// exactly as if no logger were installed.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullLogger;
+
+impl Logger for NullLogger {
+    fn log(&self, _event: &Event) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a float as a JSON value (`null` for non-finite — JSON has no
+/// NaN/Inf). Rust's `Display` for floats is shortest-round-trip, so a
+/// finite value parses back bit-identically.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)?;
+    Some(line[at + pat.len()..].trim_start())
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let rest = raw(line, key)?.strip_prefix('"')?;
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                other => out.push(other),
+            },
+            other => out.push(other),
+        }
+    }
+    None
+}
+
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let rest = raw(line, key)?;
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    let token = rest[..end].trim();
+    if token == "null" {
+        return Some(f64::NAN);
+    }
+    token.parse().ok()
+}
+
+fn usize_field(line: &str, key: &str) -> Option<usize> {
+    let v = num_field(line, key)?;
+    if v.is_finite() && v >= 0.0 {
+        Some(v as usize)
+    } else {
+        None
+    }
+}
+
+fn bool_field(line: &str, key: &str) -> Option<bool> {
+    let rest = raw(line, key)?;
+    if rest.starts_with("true") {
+        Some(true)
+    } else if rest.starts_with("false") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+impl Event {
+    /// Lowercase type tag (the `"ev"` field of the JSON line).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::KernelStart { .. } => "kernel_start",
+            Event::KernelStop { .. } => "kernel_stop",
+            Event::SolverStart { .. } => "solver_start",
+            Event::SolverIteration { .. } => "solver_iteration",
+            Event::SolverDone { .. } => "solver_done",
+            Event::Checkpoint { .. } => "checkpoint",
+            Event::Rollback { .. } => "rollback",
+            Event::Drift { .. } => "drift",
+            Event::Fallback { .. } => "fallback",
+            Event::AutotuneCandidate { .. } => "autotune_candidate",
+            Event::AutotuneDecision { .. } => "autotune_decision",
+            Event::Launch { .. } => "launch",
+            Event::Retry { .. } => "retry",
+            Event::BreakerOpen { .. } => "breaker_open",
+        }
+    }
+
+    /// Serialize to one JSON object on a single line.
+    pub fn to_json_line(&self) -> String {
+        let tag = self.kind();
+        match self {
+            Event::KernelStart { class, name } => format!(
+                "{{\"ev\": \"{tag}\", \"class\": \"{}\", \"name\": \"{}\"}}",
+                class.name(),
+                escape(name)
+            ),
+            Event::KernelStop {
+                class,
+                name,
+                exec,
+                seconds,
+                flops,
+                bytes,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"class\": \"{}\", \"name\": \"{}\", \"exec\": \"{}\", \
+                 \"seconds\": {}, \"flops\": {}, \"bytes\": {}}}",
+                class.name(),
+                escape(name),
+                escape(exec),
+                num(*seconds),
+                num(*flops),
+                num(*bytes)
+            ),
+            Event::SolverStart { solver, rows } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"rows\": {rows}}}",
+                escape(solver)
+            ),
+            Event::SolverIteration {
+                solver,
+                iteration,
+                resnorm,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"iteration\": {iteration}, \
+                 \"resnorm\": {}}}",
+                escape(solver),
+                num(*resnorm)
+            ),
+            Event::SolverDone {
+                solver,
+                iterations,
+                converged,
+                resnorm,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"iterations\": {iterations}, \
+                 \"converged\": {converged}, \"resnorm\": {}}}",
+                escape(solver),
+                num(*resnorm)
+            ),
+            Event::Checkpoint {
+                solver,
+                at_iter,
+                true_resnorm,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"at_iter\": {at_iter}, \
+                 \"true_resnorm\": {}}}",
+                escape(solver),
+                num(*true_resnorm)
+            ),
+            Event::Rollback { solver, reason } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"reason\": \"{}\"}}",
+                escape(solver),
+                escape(reason)
+            ),
+            Event::Drift {
+                solver,
+                recurrence,
+                true_resnorm,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"solver\": \"{}\", \"recurrence\": {}, \
+                 \"true_resnorm\": {}}}",
+                escape(solver),
+                num(*recurrence),
+                num(*true_resnorm)
+            ),
+            Event::Fallback { from, to } => format!(
+                "{{\"ev\": \"{tag}\", \"from\": \"{}\", \"to\": \"{}\"}}",
+                escape(from),
+                escape(to)
+            ),
+            Event::AutotuneCandidate {
+                format,
+                median_us,
+                applies,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"format\": \"{}\", \"median_us\": {}, \
+                 \"applies\": {applies}}}",
+                escape(format),
+                num(*median_us)
+            ),
+            Event::AutotuneDecision {
+                format,
+                source,
+                predicted_us,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"format\": \"{}\", \"source\": \"{}\", \
+                 \"predicted_us\": {}}}",
+                escape(format),
+                escape(source),
+                num(*predicted_us)
+            ),
+            Event::Launch {
+                artifact,
+                seconds,
+                ok,
+            } => format!(
+                "{{\"ev\": \"{tag}\", \"artifact\": \"{}\", \"seconds\": {}, \"ok\": {ok}}}",
+                escape(artifact),
+                num(*seconds)
+            ),
+            Event::Retry { what, attempt } => format!(
+                "{{\"ev\": \"{tag}\", \"what\": \"{}\", \"attempt\": {attempt}}}",
+                escape(what)
+            ),
+            Event::BreakerOpen { failures } => {
+                format!("{{\"ev\": \"{tag}\", \"failures\": {failures}}}")
+            }
+        }
+    }
+
+    /// Parse one line produced by [`to_json_line`](Self::to_json_line).
+    /// Not a general JSON parser — it understands exactly the sink's
+    /// own output, which is all the round-trip guarantee requires.
+    pub fn from_json_line(line: &str) -> Option<Event> {
+        let tag = str_field(line, "ev")?;
+        match tag.as_str() {
+            "kernel_start" => Some(Event::KernelStart {
+                class: KernelClass::from_name(&str_field(line, "class")?)?,
+                name: str_field(line, "name")?,
+            }),
+            "kernel_stop" => Some(Event::KernelStop {
+                class: KernelClass::from_name(&str_field(line, "class")?)?,
+                name: str_field(line, "name")?,
+                exec: str_field(line, "exec")?,
+                seconds: num_field(line, "seconds")?,
+                flops: num_field(line, "flops")?,
+                bytes: num_field(line, "bytes")?,
+            }),
+            "solver_start" => Some(Event::SolverStart {
+                solver: str_field(line, "solver")?,
+                rows: usize_field(line, "rows")?,
+            }),
+            "solver_iteration" => Some(Event::SolverIteration {
+                solver: str_field(line, "solver")?,
+                iteration: usize_field(line, "iteration")?,
+                resnorm: num_field(line, "resnorm")?,
+            }),
+            "solver_done" => Some(Event::SolverDone {
+                solver: str_field(line, "solver")?,
+                iterations: usize_field(line, "iterations")?,
+                converged: bool_field(line, "converged")?,
+                resnorm: num_field(line, "resnorm")?,
+            }),
+            "checkpoint" => Some(Event::Checkpoint {
+                solver: str_field(line, "solver")?,
+                at_iter: usize_field(line, "at_iter")?,
+                true_resnorm: num_field(line, "true_resnorm")?,
+            }),
+            "rollback" => Some(Event::Rollback {
+                solver: str_field(line, "solver")?,
+                reason: str_field(line, "reason")?,
+            }),
+            "drift" => Some(Event::Drift {
+                solver: str_field(line, "solver")?,
+                recurrence: num_field(line, "recurrence")?,
+                true_resnorm: num_field(line, "true_resnorm")?,
+            }),
+            "fallback" => Some(Event::Fallback {
+                from: str_field(line, "from")?,
+                to: str_field(line, "to")?,
+            }),
+            "autotune_candidate" => Some(Event::AutotuneCandidate {
+                format: str_field(line, "format")?,
+                median_us: num_field(line, "median_us")?,
+                applies: usize_field(line, "applies")?,
+            }),
+            "autotune_decision" => Some(Event::AutotuneDecision {
+                format: str_field(line, "format")?,
+                source: str_field(line, "source")?,
+                predicted_us: num_field(line, "predicted_us")?,
+            }),
+            "launch" => Some(Event::Launch {
+                artifact: str_field(line, "artifact")?,
+                seconds: num_field(line, "seconds")?,
+                ok: bool_field(line, "ok")?,
+            }),
+            "retry" => Some(Event::Retry {
+                what: str_field(line, "what")?,
+                attempt: usize_field(line, "attempt")? as u32,
+            }),
+            "breaker_open" => Some(Event::BreakerOpen {
+                failures: num_field(line, "failures")? as u64,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_with_quotes_and_backslashes_round_trip() {
+        let e = Event::Rollback {
+            solver: "cg".to_string(),
+            reason: "transient: execute \"spmv\" failed \\ twice".to_string(),
+        };
+        let line = e.to_json_line();
+        assert_eq!(Event::from_json_line(&line), Some(e));
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        let e = Event::SolverIteration {
+            solver: "cg".to_string(),
+            iteration: 1,
+            resnorm: f64::NAN,
+        };
+        let line = e.to_json_line();
+        assert!(line.contains("\"resnorm\": null"), "{line}");
+        // null parses back to NaN (the event compares unequal — NaN —
+        // but the parse itself must not fail)
+        match Event::from_json_line(&line) {
+            Some(Event::SolverIteration { resnorm, .. }) => assert!(resnorm.is_nan()),
+            other => panic!("bad parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        assert_eq!(Event::from_json_line("{\"ev\": \"nonsense\"}"), None);
+        assert_eq!(Event::from_json_line("not json at all"), None);
+    }
+
+    #[test]
+    fn kernel_class_names_round_trip() {
+        for class in [KernelClass::Spmv, KernelClass::Blas, KernelClass::Runtime] {
+            assert_eq!(KernelClass::from_name(class.name()), Some(class));
+        }
+        assert_eq!(KernelClass::from_name("bogus"), None);
+    }
+}

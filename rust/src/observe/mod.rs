@@ -1,0 +1,252 @@
+//! Runtime observability: a Ginkgo-style Logger/Event layer.
+//!
+//! The paper's evaluation method is per-kernel achieved-vs-roofline
+//! accounting; the sibling Ginkgo ports expose that accounting through
+//! an event/Logger layer instead of ad-hoc benches. This module is
+//! that layer for sparkle:
+//!
+//! - [`Event`] — flat taxonomy covering kernel start/stop (with
+//!   flop/byte models from [`perfmodel::traffic`](crate::perfmodel)),
+//!   solver iterations, resilience checkpoints/rollbacks/fallbacks,
+//!   autotune candidates/decisions, and runtime dispatch health.
+//! - [`Logger`] — the sink trait; [`Record`] (in-memory),
+//!   [`JsonlLogger`] (streaming JSON lines) and [`NullLogger`] are
+//!   built in.
+//! - [`Profile`] — aggregates an event stream into per-kernel and
+//!   per-phase breakdowns with GF/s, GB/s and roofline efficiency
+//!   against a [`perfmodel::Device`](crate::perfmodel::Device).
+//!
+//! # Zero cost when disabled
+//!
+//! The logger slot is global (kernel dispatch has no per-call context
+//! to thread a logger through). [`emit`] takes a *closure* that builds
+//! the event, and the disabled path is a single relaxed atomic load:
+//! no event is constructed, nothing allocates, no lock is touched.
+//! Instrumented call sites therefore cost one branch when nothing is
+//! installed.
+//!
+//! # Usage
+//!
+//! ```ignore
+//! let rec = std::sync::Arc::new(observe::Record::new());
+//! let _scope = observe::install_scoped(rec.clone());
+//! solver.solve(&a, &b, &mut x)?;
+//! drop(_scope); // previous logger (usually none) restored
+//! let profile = observe::Profile::from_events(
+//!     &rec.events(), Device::Gen12, Precision::Double);
+//! profile.summary_table().print();
+//! ```
+
+pub mod event;
+pub mod profile;
+pub mod sink;
+
+pub use event::{Event, KernelClass, Logger, NullLogger};
+pub use profile::{KernelProfile, PhaseProfile, Profile};
+pub use sink::{JsonlLogger, Record};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use crate::core::types::Precision;
+use crate::matgen::MatrixStats;
+use crate::perfmodel::traffic::{spmv_flops, spmv_useful_bytes, SpmvKernelKind};
+
+/// Fast-path switch: `true` iff an enabled logger is installed.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed logger, if any. Only read after `ENABLED` says so,
+/// and on the (cold) install/uninstall paths.
+static LOGGER: RwLock<Option<Arc<dyn Logger>>> = RwLock::new(None);
+
+/// Whether an enabled logger is currently installed. One relaxed
+/// atomic load — this is the branch every instrumented site pays.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install `logger` globally, replacing (and returning) any previous
+/// one. Prefer [`install_scoped`] which restores the previous logger
+/// automatically.
+pub fn install(logger: Arc<dyn Logger>) -> Option<Arc<dyn Logger>> {
+    let on = logger.enabled();
+    let prev = {
+        let mut slot = LOGGER.write().unwrap_or_else(|p| p.into_inner());
+        slot.replace(logger)
+    };
+    ENABLED.store(on, Ordering::Relaxed);
+    prev
+}
+
+/// Remove the global logger, returning it.
+pub fn uninstall() -> Option<Arc<dyn Logger>> {
+    let prev = {
+        let mut slot = LOGGER.write().unwrap_or_else(|p| p.into_inner());
+        slot.take()
+    };
+    ENABLED.store(false, Ordering::Relaxed);
+    prev
+}
+
+/// Install `logger` for the lifetime of the returned guard; dropping
+/// the guard restores whatever was installed before.
+pub fn install_scoped(logger: Arc<dyn Logger>) -> ScopedLogger {
+    let prev = install(logger);
+    ScopedLogger { prev }
+}
+
+/// RAII guard from [`install_scoped`].
+pub struct ScopedLogger {
+    prev: Option<Arc<dyn Logger>>,
+}
+
+impl Drop for ScopedLogger {
+    fn drop(&mut self) {
+        match self.prev.take() {
+            Some(prev) => {
+                install(prev);
+            }
+            None => {
+                uninstall();
+            }
+        }
+    }
+}
+
+/// Emit an event. `make` runs only when an enabled logger is
+/// installed, so the disabled path constructs nothing.
+#[inline]
+pub fn emit(make: impl FnOnce() -> Event) {
+    if enabled() {
+        dispatch(&make());
+    }
+}
+
+#[cold]
+fn dispatch(event: &Event) {
+    let slot = LOGGER.read().unwrap_or_else(|p| p.into_inner());
+    if let Some(logger) = slot.as_ref() {
+        logger.log(event);
+    }
+}
+
+/// Convenience helper for the six Krylov drivers: one iteration of
+/// `solver` finished with recurrence residual `resnorm`.
+#[inline]
+pub fn solver_iteration(solver: &'static str, iteration: usize, resnorm: f64) {
+    emit(|| Event::SolverIteration {
+        solver: solver.to_string(),
+        iteration,
+        resnorm,
+    });
+}
+
+/// Scoped kernel timer. Construction emits [`Event::KernelStart`];
+/// dropping it emits [`Event::KernelStop`] carrying the wall time and
+/// the useful-work model. `new` returns `None` when no logger is
+/// enabled, so bind it as `let _obs = ...;` and the disabled path
+/// costs one branch.
+pub struct KernelGuard {
+    class: KernelClass,
+    name: &'static str,
+    exec: &'static str,
+    flops: f64,
+    bytes: f64,
+    start: Instant,
+}
+
+impl KernelGuard {
+    /// Start timing `name` (a kernel of `class` on executor `exec`)
+    /// with the given useful-work model. Returns `None` (no timing,
+    /// no events) when observability is off.
+    #[inline]
+    pub fn new(
+        class: KernelClass,
+        name: &'static str,
+        exec: &'static str,
+        flops: f64,
+        bytes: f64,
+    ) -> Option<KernelGuard> {
+        if !enabled() {
+            return None;
+        }
+        dispatch(&Event::KernelStart {
+            class,
+            name: name.to_string(),
+        });
+        Some(KernelGuard {
+            class,
+            name,
+            exec,
+            flops,
+            bytes,
+            start: Instant::now(),
+        })
+    }
+}
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        let seconds = self.start.elapsed().as_secs_f64();
+        dispatch(&Event::KernelStop {
+            class: self.class,
+            name: self.name.to_string(),
+            exec: self.exec.to_string(),
+            seconds,
+            flops: self.flops,
+            bytes: self.bytes,
+        });
+    }
+}
+
+/// Guard for an SpMV kernel: flop/byte model from
+/// `perfmodel::traffic` (2·nnz flops; format-specific useful bytes).
+#[inline]
+pub fn spmv_guard(
+    name: &'static str,
+    exec: &'static str,
+    rows: usize,
+    nnz: usize,
+    precision: Precision,
+) -> Option<KernelGuard> {
+    if !enabled() {
+        return None;
+    }
+    let kind = match name {
+        "csr" => SpmvKernelKind::Csr,
+        "coo" => SpmvKernelKind::Coo,
+        "ell" => SpmvKernelKind::Ell,
+        _ => SpmvKernelKind::SellP,
+    };
+    let stats = MatrixStats {
+        n: rows,
+        nnz,
+        avg_row: nnz as f64 / rows.max(1) as f64,
+        max_row: 0,
+        row_cv: 0.0,
+        bandwidth_frac: 0.0,
+    };
+    KernelGuard::new(
+        KernelClass::Spmv,
+        name,
+        exec,
+        spmv_flops(&stats),
+        spmv_useful_bytes(kind, &stats, precision),
+    )
+}
+
+/// Guard for a BLAS-1 kernel with an explicit flop/byte model.
+#[inline]
+pub fn blas_guard(
+    name: &'static str,
+    exec: &'static str,
+    flops: f64,
+    bytes: f64,
+) -> Option<KernelGuard> {
+    if !enabled() {
+        return None;
+    }
+    KernelGuard::new(KernelClass::Blas, name, exec, flops, bytes)
+}

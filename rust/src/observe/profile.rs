@@ -1,0 +1,437 @@
+//! Aggregation of an event stream into per-kernel / per-phase
+//! roofline accounting — the report the paper's evaluation (§4–§6)
+//! is built from.
+
+use std::path::Path;
+
+use super::event::{Event, KernelClass};
+use crate::bench_util::{f2, Table};
+use crate::core::types::Precision;
+use crate::perfmodel::{Device, Roofline};
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jstr_opt(v: &Option<String>) -> String {
+    match v {
+        Some(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        None => "null".to_string(),
+    }
+}
+
+/// Accumulated counters for one kernel (keyed by class + name + exec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelProfile {
+    pub class: KernelClass,
+    pub name: String,
+    pub exec: String,
+    pub calls: usize,
+    pub seconds: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl KernelProfile {
+    /// Achieved GFLOP/s over all calls.
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.seconds.max(1e-9) / 1e9
+    }
+
+    /// Achieved GB/s of useful traffic over all calls.
+    pub fn gbs(&self) -> f64 {
+        self.bytes / self.seconds.max(1e-9) / 1e9
+    }
+
+    /// Arithmetic intensity (flop/byte) of the useful-work model.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes > 0.0 {
+            self.flops / self.bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved fraction of the roofline-attainable rate at this
+    /// kernel's intensity, clamped to 1.0 (host caches can beat a
+    /// DRAM roofline on cache-resident workloads). `None` when the
+    /// kernel has no flop model or never ran.
+    pub fn efficiency(&self, roofline: &Roofline, p: Precision) -> Option<f64> {
+        if self.flops <= 0.0 || self.bytes <= 0.0 || self.seconds <= 0.0 {
+            return None;
+        }
+        let attainable = roofline.attainable_gflops(self.intensity(), p);
+        if attainable <= 0.0 {
+            return None;
+        }
+        Some((self.gflops() / attainable).min(1.0))
+    }
+}
+
+/// Accumulated counters for one kernel class (the per-phase view:
+/// "how much of this solve was SpMV vs BLAS-1 vs runtime dispatch").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseProfile {
+    pub class: KernelClass,
+    pub calls: usize,
+    pub seconds: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// A run's aggregated telemetry: per-kernel and per-phase breakdowns
+/// plus solver/resilience/autotune headline numbers. Build one with
+/// [`from_events`](Self::from_events), render it with
+/// [`summary_table`](Self::summary_table), persist it with
+/// [`write_json`](Self::write_json).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Device whose roofline efficiencies are computed against.
+    pub device: Device,
+    /// Precision used for the roofline peak.
+    pub precision: Precision,
+    pub kernels: Vec<KernelProfile>,
+    pub phases: Vec<PhaseProfile>,
+    /// Solver of the last `SolverDone` event, if any.
+    pub solver: Option<String>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_resnorm: f64,
+    /// Total events aggregated.
+    pub events: usize,
+    pub checkpoints: usize,
+    pub rollbacks: usize,
+    pub fallbacks: usize,
+    pub retries: usize,
+    pub autotune_format: Option<String>,
+    pub autotune_source: Option<String>,
+}
+
+impl Profile {
+    /// Fold an event stream into a report. Order-insensitive except
+    /// that the *last* `SolverDone` / `AutotuneDecision` wins.
+    pub fn from_events(events: &[Event], device: Device, precision: Precision) -> Self {
+        let mut profile = Profile {
+            device,
+            precision,
+            kernels: Vec::new(),
+            phases: Vec::new(),
+            solver: None,
+            iterations: 0,
+            converged: false,
+            final_resnorm: f64::NAN,
+            events: events.len(),
+            checkpoints: 0,
+            rollbacks: 0,
+            fallbacks: 0,
+            retries: 0,
+            autotune_format: None,
+            autotune_source: None,
+        };
+        for event in events {
+            match event {
+                Event::KernelStop {
+                    class,
+                    name,
+                    exec,
+                    seconds,
+                    flops,
+                    bytes,
+                } => profile.add_kernel(*class, name, exec, *seconds, *flops, *bytes),
+                Event::Launch {
+                    artifact, seconds, ..
+                } => profile.add_kernel(KernelClass::Runtime, artifact, "xla", *seconds, 0.0, 0.0),
+                Event::SolverDone {
+                    solver,
+                    iterations,
+                    converged,
+                    resnorm,
+                } => {
+                    profile.solver = Some(solver.clone());
+                    profile.iterations = *iterations;
+                    profile.converged = *converged;
+                    profile.final_resnorm = *resnorm;
+                }
+                Event::Checkpoint { .. } => profile.checkpoints += 1,
+                Event::Rollback { .. } => profile.rollbacks += 1,
+                Event::Fallback { .. } => profile.fallbacks += 1,
+                Event::Retry { .. } => profile.retries += 1,
+                Event::AutotuneDecision { format, source, .. } => {
+                    profile.autotune_format = Some(format.clone());
+                    profile.autotune_source = Some(source.clone());
+                }
+                _ => {}
+            }
+        }
+        profile
+    }
+
+    fn add_kernel(
+        &mut self,
+        class: KernelClass,
+        name: &str,
+        exec: &str,
+        seconds: f64,
+        flops: f64,
+        bytes: f64,
+    ) {
+        let entry = match self
+            .kernels
+            .iter_mut()
+            .find(|k| k.class == class && k.name == name && k.exec == exec)
+        {
+            Some(k) => k,
+            None => {
+                self.kernels.push(KernelProfile {
+                    class,
+                    name: name.to_string(),
+                    exec: exec.to_string(),
+                    calls: 0,
+                    seconds: 0.0,
+                    flops: 0.0,
+                    bytes: 0.0,
+                });
+                self.kernels.last_mut().expect("just pushed")
+            }
+        };
+        entry.calls += 1;
+        entry.seconds += seconds;
+        entry.flops += flops;
+        entry.bytes += bytes;
+        let phase = match self.phases.iter_mut().find(|p| p.class == class) {
+            Some(p) => p,
+            None => {
+                self.phases.push(PhaseProfile {
+                    class,
+                    calls: 0,
+                    seconds: 0.0,
+                    flops: 0.0,
+                    bytes: 0.0,
+                });
+                self.phases.last_mut().expect("just pushed")
+            }
+        };
+        phase.calls += 1;
+        phase.seconds += seconds;
+        phase.flops += flops;
+        phase.bytes += bytes;
+    }
+
+    /// Roofline model of the profile's device.
+    pub fn roofline(&self) -> Roofline {
+        Roofline::new(self.device.spec())
+    }
+
+    /// Total kernel-attributed wall time.
+    pub fn total_seconds(&self) -> f64 {
+        self.phases.iter().map(|p| p.seconds).sum()
+    }
+
+    /// Best SpMV roofline efficiency across kernels (the headline
+    /// number of the paper's evaluation). `None` if no SpMV ran.
+    pub fn best_spmv_efficiency(&self) -> Option<f64> {
+        let roofline = self.roofline();
+        self.kernels
+            .iter()
+            .filter(|k| k.class == KernelClass::Spmv)
+            .filter_map(|k| k.efficiency(&roofline, self.precision))
+            .fold(None, |best, e| {
+                Some(best.map_or(e, |b: f64| b.max(e)))
+            })
+    }
+
+    /// Per-kernel summary rendered with `bench_util::Table`.
+    pub fn summary_table(&self) -> Table {
+        let roofline = self.roofline();
+        let mut table = Table::new(&[
+            "kernel", "class", "exec", "calls", "time_ms", "GFLOP/s", "GB/s", "eff",
+        ]);
+        for k in &self.kernels {
+            let eff = match k.efficiency(&roofline, self.precision) {
+                Some(e) => f2(e),
+                None => "-".to_string(),
+            };
+            table.row(&[
+                k.name.clone(),
+                k.class.name().to_string(),
+                k.exec.clone(),
+                k.calls.to_string(),
+                f2(k.seconds * 1e3),
+                f2(k.gflops()),
+                f2(k.gbs()),
+                eff,
+            ]);
+        }
+        table
+    }
+
+    /// Serialize the whole report (schema `sparkle/observe/v1`).
+    pub fn to_json(&self) -> String {
+        let roofline = self.roofline();
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"sparkle/observe/v1\",\n");
+        s.push_str(&format!(
+            "  \"device\": \"{}\",\n",
+            self.device.spec().name
+        ));
+        s.push_str(&format!(
+            "  \"precision\": \"{}\",\n",
+            self.precision.name()
+        ));
+        s.push_str(&format!("  \"solver\": {},\n", jstr_opt(&self.solver)));
+        s.push_str(&format!("  \"iterations\": {},\n", self.iterations));
+        s.push_str(&format!("  \"converged\": {},\n", self.converged));
+        s.push_str(&format!(
+            "  \"final_resnorm\": {},\n",
+            jnum(self.final_resnorm)
+        ));
+        s.push_str(&format!("  \"events\": {},\n", self.events));
+        s.push_str(&format!("  \"checkpoints\": {},\n", self.checkpoints));
+        s.push_str(&format!("  \"rollbacks\": {},\n", self.rollbacks));
+        s.push_str(&format!("  \"fallbacks\": {},\n", self.fallbacks));
+        s.push_str(&format!("  \"retries\": {},\n", self.retries));
+        s.push_str(&format!(
+            "  \"autotune_format\": {},\n",
+            jstr_opt(&self.autotune_format)
+        ));
+        s.push_str(&format!(
+            "  \"autotune_source\": {},\n",
+            jstr_opt(&self.autotune_source)
+        ));
+        s.push_str("  \"kernels\": [\n");
+        for (i, k) in self.kernels.iter().enumerate() {
+            let eff = match k.efficiency(&roofline, self.precision) {
+                Some(e) => jnum(e),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"class\": \"{}\", \"exec\": \"{}\", \"calls\": {}, \
+                 \"seconds\": {}, \"gflops\": {}, \"gbs\": {}, \"intensity\": {}, \
+                 \"efficiency\": {}}}{}\n",
+                k.name,
+                k.class.name(),
+                k.exec,
+                k.calls,
+                jnum(k.seconds),
+                jnum(k.gflops()),
+                jnum(k.gbs()),
+                jnum(k.intensity()),
+                eff,
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"phases\": [\n");
+        for (i, p) in self.phases.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"class\": \"{}\", \"calls\": {}, \"seconds\": {}, \"flops\": {}, \
+                 \"bytes\": {}}}{}\n",
+                p.class.name(),
+                p.calls,
+                jnum(p.seconds),
+                jnum(p.flops),
+                jnum(p.bytes),
+                if i + 1 < self.phases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write [`to_json`](Self::to_json) to `path`.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spmv_stop(seconds: f64) -> Event {
+        Event::KernelStop {
+            class: KernelClass::Spmv,
+            name: "csr".to_string(),
+            exec: "par".to_string(),
+            seconds,
+            flops: 2.0 * 4900.0,
+            bytes: 4900.0 * 12.0 + 1001.0 * 4.0 + 2.0 * 1000.0 * 8.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_calls_and_counts_bookkeeping_events() {
+        let events = vec![
+            spmv_stop(1e-5),
+            spmv_stop(1e-5),
+            Event::Checkpoint {
+                solver: "cg".to_string(),
+                at_iter: 10,
+                true_resnorm: 1e-3,
+            },
+            Event::Retry {
+                what: "execute".to_string(),
+                attempt: 1,
+            },
+            Event::SolverDone {
+                solver: "cg".to_string(),
+                iterations: 42,
+                converged: true,
+                resnorm: 1e-9,
+            },
+        ];
+        let p = Profile::from_events(&events, Device::Gen12, Precision::Double);
+        assert_eq!(p.kernels.len(), 1);
+        assert_eq!(p.kernels[0].calls, 2);
+        assert_eq!(p.phases.len(), 1);
+        assert_eq!(p.checkpoints, 1);
+        assert_eq!(p.retries, 1);
+        assert_eq!(p.iterations, 42);
+        assert!(p.converged);
+        assert_eq!(p.solver.as_deref(), Some("cg"));
+    }
+
+    #[test]
+    fn efficiency_is_clamped_to_unit_interval() {
+        // absurdly fast "measurement": would beat the roofline, must
+        // clamp to exactly 1.0
+        let p = Profile::from_events(&[spmv_stop(1e-12)], Device::Gen12, Precision::Double);
+        let eff = p.best_spmv_efficiency().expect("spmv ran");
+        assert_eq!(eff, 1.0);
+        // plausibly slow measurement: strictly inside (0, 1)
+        let p = Profile::from_events(&[spmv_stop(1.0)], Device::Gen12, Precision::Double);
+        let eff = p.best_spmv_efficiency().expect("spmv ran");
+        assert!(eff > 0.0 && eff < 1.0, "eff {eff}");
+    }
+
+    #[test]
+    fn zero_flop_kernels_report_no_efficiency() {
+        let events = vec![Event::Launch {
+            artifact: "spmv_csr_f64".to_string(),
+            seconds: 1e-4,
+            ok: true,
+        }];
+        let p = Profile::from_events(&events, Device::Gen12, Precision::Double);
+        assert_eq!(p.kernels.len(), 1);
+        let roofline = p.roofline();
+        assert_eq!(p.kernels[0].efficiency(&roofline, p.precision), None);
+        assert_eq!(p.best_spmv_efficiency(), None);
+    }
+
+    #[test]
+    fn json_report_carries_schema_and_kernels() {
+        let p = Profile::from_events(&[spmv_stop(1e-5)], Device::Gen12, Precision::Double);
+        let json = p.to_json();
+        assert!(json.contains("\"schema\": \"sparkle/observe/v1\""));
+        assert!(json.contains("\"name\": \"csr\""));
+        assert!(json.contains("\"efficiency\": "));
+        // summary table renders one data row
+        assert_eq!(p.summary_table().len(), 1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Built-in logger sinks: in-memory [`Record`] and streaming
+//! JSON-lines ([`JsonlLogger`]).
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::event::{Event, Logger};
+
+/// In-memory sink: keeps every event, in order, for later inspection
+/// or aggregation into a [`Profile`](crate::observe::Profile).
+#[derive(Debug, Default)]
+pub struct Record {
+    events: Mutex<Vec<Event>>,
+}
+
+impl Record {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of all events logged so far.
+    pub fn events(&self) -> Vec<Event> {
+        self.events
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.events
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clear();
+    }
+}
+
+impl Logger for Record {
+    fn log(&self, event: &Event) {
+        self.events
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(event.clone());
+    }
+}
+
+enum JsonlSink {
+    Memory(Mutex<Vec<String>>),
+    File(Mutex<BufWriter<File>>),
+}
+
+/// Streaming JSON-lines sink: one JSON object per event, either
+/// buffered in memory ([`in_memory`](Self::in_memory)) or appended to
+/// a file ([`to_file`](Self::to_file)).
+pub struct JsonlLogger {
+    sink: JsonlSink,
+}
+
+impl JsonlLogger {
+    /// Buffer lines in memory; retrieve them with
+    /// [`lines`](Self::lines).
+    pub fn in_memory() -> Self {
+        JsonlLogger {
+            sink: JsonlSink::Memory(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Stream lines to `path` (truncating any existing file).
+    pub fn to_file(path: impl AsRef<Path>) -> io::Result<Self> {
+        let file = File::create(path)?;
+        Ok(JsonlLogger {
+            sink: JsonlSink::File(Mutex::new(BufWriter::new(file))),
+        })
+    }
+
+    /// Lines collected so far (empty for file-backed sinks).
+    pub fn lines(&self) -> Vec<String> {
+        match &self.sink {
+            JsonlSink::Memory(lines) => lines.lock().unwrap_or_else(|p| p.into_inner()).clone(),
+            JsonlSink::File(_) => Vec::new(),
+        }
+    }
+
+    /// Flush buffered output (no-op for the in-memory sink).
+    pub fn flush(&self) -> io::Result<()> {
+        match &self.sink {
+            JsonlSink::Memory(_) => Ok(()),
+            JsonlSink::File(w) => w.lock().unwrap_or_else(|p| p.into_inner()).flush(),
+        }
+    }
+}
+
+impl Logger for JsonlLogger {
+    fn log(&self, event: &Event) {
+        let line = event.to_json_line();
+        match &self.sink {
+            JsonlSink::Memory(lines) => {
+                lines.lock().unwrap_or_else(|p| p.into_inner()).push(line);
+            }
+            JsonlSink::File(w) => {
+                let mut w = w.lock().unwrap_or_else(|p| p.into_inner());
+                // a failed telemetry write must never take the solve
+                // down with it
+                let _ = writeln!(w, "{line}");
+            }
+        }
+    }
+}
+
+impl Drop for JsonlLogger {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observe::event::KernelClass;
+
+    #[test]
+    fn record_keeps_order_and_clears() {
+        let rec = Record::new();
+        assert!(rec.is_empty());
+        rec.log(&Event::SolverStart {
+            solver: "cg".to_string(),
+            rows: 16,
+        });
+        rec.log(&Event::KernelStart {
+            class: KernelClass::Spmv,
+            name: "csr".to_string(),
+        });
+        assert_eq!(rec.len(), 2);
+        match &rec.events()[0] {
+            Event::SolverStart { solver, rows } => {
+                assert_eq!(solver, "cg");
+                assert_eq!(*rows, 16);
+            }
+            other => panic!("order lost: {other:?}"),
+        }
+        rec.clear();
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn in_memory_jsonl_lines_parse_back() {
+        let sink = JsonlLogger::in_memory();
+        let e = Event::Fallback {
+            from: "cg".to_string(),
+            to: "bicgstab".to_string(),
+        };
+        sink.log(&e);
+        let lines = sink.lines();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(Event::from_json_line(&lines[0]), Some(e));
+    }
+}

@@ -302,6 +302,10 @@ impl ResilientSolver {
                     from: self.chain[ci - 1].name(),
                     to: kind.name(),
                 });
+                crate::observe::emit(|| crate::observe::Event::Fallback {
+                    from: self.chain[ci - 1].name().to_string(),
+                    to: kind.name().to_string(),
+                });
                 fallbacks = ci;
             }
             final_solver = kind.name();
@@ -356,6 +360,11 @@ impl ResilientSolver {
                                         recurrence: r.resnorm,
                                         true_resnorm: tr,
                                     });
+                                    crate::observe::emit(|| crate::observe::Event::Drift {
+                                        solver: kind.name().to_string(),
+                                        recurrence: r.resnorm,
+                                        true_resnorm: tr,
+                                    });
                                 }
                                 // convergence is only ever declared on
                                 // the verified residual — a lying
@@ -384,6 +393,13 @@ impl ResilientSolver {
                                     if tr < best_true {
                                         checkpoint.copy_from(x)?;
                                         best_true = tr;
+                                        crate::observe::emit(|| {
+                                            crate::observe::Event::Checkpoint {
+                                                solver: kind.name().to_string(),
+                                                at_iter: total,
+                                                true_resnorm: tr,
+                                            }
+                                        });
                                     }
                                     RecoveryEvent::BreakdownRestart {
                                         solver: kind.name(),
@@ -395,6 +411,11 @@ impl ResilientSolver {
                                     // checkpoint, no restart burned
                                     checkpoint.copy_from(x)?;
                                     best_true = tr;
+                                    crate::observe::emit(|| crate::observe::Event::Checkpoint {
+                                        solver: kind.name().to_string(),
+                                        at_iter: total,
+                                        true_resnorm: tr,
+                                    });
                                     continue;
                                 } else {
                                     // a whole segment without progress
@@ -412,6 +433,21 @@ impl ResilientSolver {
                 // one restart; when exhausted, the next chain entry
                 // takes over from the same checkpoint
                 x.copy_from(&checkpoint)?;
+                crate::observe::emit(|| crate::observe::Event::Rollback {
+                    solver: kind.name().to_string(),
+                    reason: match &rollback {
+                        RecoveryEvent::BreakdownRestart { breakdown, .. } => {
+                            format!("breakdown: {breakdown:?}")
+                        }
+                        RecoveryEvent::TransientRestart { error, .. } => {
+                            format!("transient: {error}")
+                        }
+                        RecoveryEvent::StagnationRestart { true_resnorm, .. } => {
+                            format!("stagnation at {true_resnorm:.3e}")
+                        }
+                        other => format!("{other:?}"),
+                    },
+                });
                 events.push(rollback);
                 restarts += 1;
                 if restarts_left == 0 {

@@ -47,14 +47,32 @@ impl RetryPolicy {
     /// Run `f` up to [`attempts`](Self::attempts) times, sleeping with
     /// exponential backoff between attempts; returns the first success
     /// or the last error.
-    pub fn run<T>(&self, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    pub fn run<T>(&self, f: impl FnMut() -> Result<T>) -> Result<T> {
+        self.run_observed("dispatch", f)
+    }
+
+    /// Like [`run`](Self::run), but each failed attempt emits an
+    /// [`Event::Retry`](crate::observe::Event::Retry) tagged with
+    /// `what` so a logger can see transient-failure churn as it
+    /// happens.
+    pub fn run_observed<T>(
+        &self,
+        what: &'static str,
+        mut f: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
         let attempts = self.attempts.max(1);
         let mut backoff = self.base_backoff;
         let mut last_err = None;
         for attempt in 0..attempts {
             match f() {
                 Ok(v) => return Ok(v),
-                Err(e) => last_err = Some(e),
+                Err(e) => {
+                    crate::observe::emit(|| crate::observe::Event::Retry {
+                        what: what.to_string(),
+                        attempt: attempt + 1,
+                    });
+                    last_err = Some(e);
+                }
             }
             if attempt + 1 < attempts && !backoff.is_zero() {
                 std::thread::sleep(backoff);

@@ -120,16 +120,32 @@ impl XlaRuntime {
         let exe = self.executable(name)?;
         self.launches
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let bufs = match self.retry.run(|| {
+        let t0 = std::time::Instant::now();
+        let bufs = match self.retry.run_observed("execute_b", || {
             exe.execute_b::<&xla::PjRtBuffer>(args)
                 .map_err(|e| SparkleError::Runtime(format!("execute_b {name}: {e:?}")))
         }) {
             Ok(b) => {
                 self.breaker.record_success();
+                crate::observe::emit(|| crate::observe::Event::Launch {
+                    artifact: name.to_string(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    ok: true,
+                });
                 b
             }
             Err(e) => {
                 self.breaker.record_failure();
+                crate::observe::emit(|| crate::observe::Event::Launch {
+                    artifact: name.to_string(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    ok: false,
+                });
+                if self.breaker.is_open() {
+                    crate::observe::emit(|| crate::observe::Event::BreakerOpen {
+                        failures: self.breaker.failures_total(),
+                    });
+                }
                 return Err(e);
             }
         };
@@ -183,16 +199,32 @@ impl XlaRuntime {
             .collect::<Result<Vec<_>>>()?;
         self.launches
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let bufs = match self.retry.run(|| {
+        let t0 = std::time::Instant::now();
+        let bufs = match self.retry.run_observed("execute", || {
             exe.execute::<xla::Literal>(&literals)
                 .map_err(|e| SparkleError::Runtime(format!("execute {name}: {e:?}")))
         }) {
             Ok(b) => {
                 self.breaker.record_success();
+                crate::observe::emit(|| crate::observe::Event::Launch {
+                    artifact: name.to_string(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    ok: true,
+                });
                 b
             }
             Err(e) => {
                 self.breaker.record_failure();
+                crate::observe::emit(|| crate::observe::Event::Launch {
+                    artifact: name.to_string(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    ok: false,
+                });
+                if self.breaker.is_open() {
+                    crate::observe::emit(|| crate::observe::Event::BreakerOpen {
+                        failures: self.breaker.failures_total(),
+                    });
+                }
                 return Err(e);
             }
         };

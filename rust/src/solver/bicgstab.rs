@@ -106,6 +106,7 @@ impl<T: Value> Solver<T> for BiCgStab {
             blas::axpy(&exec, -omega, &t, &mut r)?;
             resnorm = blas::norm2(&exec, &r)?.as_f64();
             iters += 1;
+            crate::observe::solver_iteration("bicgstab", iters, resnorm);
             if self.config.record_history {
                 history.push(resnorm);
             }

@@ -1,0 +1,313 @@
+//! One entry point for every way to run a solve.
+//!
+//! Before this builder existed there were three divergent entry
+//! points: `Solver::solve` (operator in hand), `Solver::solve_data`
+//! (autotuned format selection) and `ResilientSolver::solve`
+//! (checkpointed recovery), each configured differently. The builder
+//! attaches criterion, preconditioner, breakdown policy, resilience
+//! config and an [`observe::Logger`](crate::observe::Logger) in one
+//! place and routes to the right driver; the old methods remain as
+//! thin wrappers so existing code compiles unchanged.
+//!
+//! ```ignore
+//! let result = SolverBuilder::cg()
+//!     .with_criterion(Criterion::residual(1e-10, 500))
+//!     .with_logger(record.clone())
+//!     .solve(&a, &b, &mut x)?;
+//! ```
+
+use std::sync::Arc;
+
+use super::{Cg, Fcg, Richardson, SolveResult, Solver, SolverConfig};
+use crate::autotune::AutoMatrix;
+use crate::core::error::Result;
+use crate::core::executor::Executor;
+use crate::core::linop::LinOp;
+use crate::core::matrix_data::MatrixData;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+use crate::observe::{self, Logger};
+use crate::resilience::{BreakdownPolicy, RecoveryPolicy, ResilientSolver, SolverKind};
+use crate::stop::Criterion;
+
+/// Builder-style front door for the solver stack.
+pub struct SolverBuilder<T: Value> {
+    kind: SolverKind,
+    criterion: Criterion,
+    record_history: bool,
+    breakdown: BreakdownPolicy,
+    precond: Option<Arc<dyn LinOp<T>>>,
+    resilient: bool,
+    chain: Option<Vec<SolverKind>>,
+    recovery: Option<RecoveryPolicy>,
+    logger: Option<Arc<dyn Logger>>,
+}
+
+impl<T: Value> SolverBuilder<T> {
+    /// Start from an explicit solver kind.
+    pub fn new(kind: SolverKind) -> Self {
+        Self {
+            kind,
+            criterion: Criterion::default(),
+            record_history: false,
+            breakdown: BreakdownPolicy::default(),
+            precond: None,
+            resilient: false,
+            chain: None,
+            recovery: None,
+            logger: None,
+        }
+    }
+
+    /// Conjugate Gradient (SPD systems).
+    pub fn cg() -> Self {
+        Self::new(SolverKind::Cg)
+    }
+
+    /// Flexible CG.
+    pub fn fcg() -> Self {
+        Self::new(SolverKind::Fcg)
+    }
+
+    /// BiCGSTAB (general systems).
+    pub fn bicgstab() -> Self {
+        Self::new(SolverKind::BiCgStab)
+    }
+
+    /// CGS (general systems).
+    pub fn cgs() -> Self {
+        Self::new(SolverKind::Cgs)
+    }
+
+    /// GMRES(m) with the given restart length.
+    pub fn gmres(restart: usize) -> Self {
+        Self::new(SolverKind::Gmres { restart })
+    }
+
+    /// Richardson with relaxation factor omega.
+    pub fn richardson(omega: f64) -> Self {
+        Self::new(SolverKind::Richardson { omega })
+    }
+
+    /// Stopping criterion.
+    pub fn with_criterion(mut self, criterion: Criterion) -> Self {
+        self.criterion = criterion;
+        self
+    }
+
+    /// Record the per-iteration residual history.
+    pub fn with_history(mut self, record: bool) -> Self {
+        self.record_history = record;
+        self
+    }
+
+    /// Breakdown-detection thresholds for the driver(s).
+    pub fn with_breakdown(mut self, breakdown: BreakdownPolicy) -> Self {
+        self.breakdown = breakdown;
+        self
+    }
+
+    /// Attach a preconditioner. Honored by the CG, FCG and Richardson
+    /// drivers (the ones whose iteration takes one); ignored by the
+    /// others and by the resilient path, which rebuilds plain drivers
+    /// per recovery segment.
+    pub fn with_preconditioner(mut self, m: Arc<dyn LinOp<T>>) -> Self {
+        self.precond = Some(m);
+        self
+    }
+
+    /// Route through [`ResilientSolver`]: checkpoint/restart recovery
+    /// with true-residual verification, starting from this builder's
+    /// solver kind and falling back through the default chain.
+    pub fn resilient(mut self) -> Self {
+        self.resilient = true;
+        self
+    }
+
+    /// Resilient solve with an explicit fallback chain (implies
+    /// [`resilient`](Self::resilient)).
+    pub fn with_fallback_chain(mut self, chain: Vec<SolverKind>) -> Self {
+        self.resilient = true;
+        self.chain = Some(chain);
+        self
+    }
+
+    /// Resilient solve with an explicit recovery policy (implies
+    /// [`resilient`](Self::resilient)).
+    pub fn with_recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.resilient = true;
+        self.recovery = Some(policy);
+        self
+    }
+
+    /// Install this logger (globally, scoped to each solve call) so
+    /// kernel, iteration, recovery and autotune events from the solve
+    /// land in it.
+    pub fn with_logger(mut self, logger: Arc<dyn Logger>) -> Self {
+        self.logger = Some(logger);
+        self
+    }
+
+    fn config(&self) -> SolverConfig {
+        SolverConfig {
+            criterion: self.criterion.clone(),
+            record_history: self.record_history,
+            breakdown: self.breakdown,
+        }
+    }
+
+    /// Instantiate the configured driver.
+    pub fn build(&self) -> Box<dyn Solver<T>> {
+        if self.resilient {
+            let mut rs =
+                ResilientSolver::new(self.criterion.clone()).with_breakdown(self.breakdown);
+            if let Some(policy) = self.recovery {
+                rs = rs.with_policy(policy);
+            }
+            let chain = match &self.chain {
+                Some(chain) => chain.clone(),
+                None => {
+                    // this builder's kind first, then the default
+                    // escalation (skipping a duplicate of the head)
+                    let mut chain = vec![self.kind];
+                    for fallback in [SolverKind::BiCgStab, SolverKind::Gmres { restart: 30 }] {
+                        if fallback.name() != self.kind.name() {
+                            chain.push(fallback);
+                        }
+                    }
+                    chain
+                }
+            };
+            return Box::new(rs.with_chain(chain));
+        }
+        let config = self.config();
+        match (&self.kind, &self.precond) {
+            (SolverKind::Cg, Some(m)) => Box::new(Cg::new(config).with_preconditioner(m.clone())),
+            (SolverKind::Fcg, Some(m)) => {
+                Box::new(Fcg::new(config).with_preconditioner(m.clone()))
+            }
+            (SolverKind::Richardson { omega }, Some(m)) => Box::new(
+                Richardson::new(config, T::from_f64(*omega)).with_preconditioner(m.clone()),
+            ),
+            _ => self.kind.build(config),
+        }
+    }
+
+    /// Solve `A x = b` with the configured driver, logger scoped to
+    /// the call.
+    pub fn solve(&self, a: &dyn LinOp<T>, b: &Dense<T>, x: &mut Dense<T>) -> Result<SolveResult> {
+        let _scope = self.scope();
+        self.solve_inner(a, b, x)
+    }
+
+    /// Solve directly from assembly data: the autotuner picks the
+    /// storage format ([`AutoMatrix`]), and because the logger is
+    /// installed before selection runs, its candidate/decision events
+    /// are captured too.
+    pub fn solve_data(
+        &self,
+        exec: &Arc<Executor>,
+        data: &MatrixData<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        let _scope = self.scope();
+        let a = AutoMatrix::from_data(exec.clone(), data)?;
+        self.solve_inner(&a, b, x)
+    }
+
+    fn scope(&self) -> Option<observe::ScopedLogger> {
+        self.logger.clone().map(observe::install_scoped)
+    }
+
+    fn solve_inner(
+        &self,
+        a: &dyn LinOp<T>,
+        b: &Dense<T>,
+        x: &mut Dense<T>,
+    ) -> Result<SolveResult> {
+        observe::emit(|| observe::Event::SolverStart {
+            solver: self.kind.name().to_string(),
+            rows: a.shape().rows,
+        });
+        let result = self.build().solve(a, b, x);
+        match &result {
+            Ok(r) => observe::emit(|| observe::Event::SolverDone {
+                solver: self.kind.name().to_string(),
+                iterations: r.iterations,
+                converged: r.converged,
+                resnorm: r.resnorm,
+            }),
+            Err(_) => observe::emit(|| observe::Event::SolverDone {
+                solver: self.kind.name().to_string(),
+                iterations: 0,
+                converged: false,
+                resnorm: f64::NAN,
+            }),
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dim::Dim2;
+    use crate::matgen::stencil::laplace_2d;
+
+    fn poisson_setup(
+        exec: &Arc<Executor>,
+    ) -> (crate::matrix::Csr<f64>, Dense<f64>, Dense<f64>) {
+        let data = laplace_2d::<f64>(12, 12);
+        let n = data.dim.rows;
+        let a = crate::matrix::Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+        let x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        (a, b, x)
+    }
+
+    #[test]
+    fn builder_cg_matches_plain_driver() {
+        let exec = Executor::reference();
+        let (a, b, mut x) = poisson_setup(&exec);
+        let crit = Criterion::residual(1e-10, 500);
+        let r = SolverBuilder::cg()
+            .with_criterion(crit.clone())
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(r.converged, "{r:?}");
+
+        let (_, _, mut x2) = poisson_setup(&exec);
+        let r2 = Cg::new(SolverConfig::with_criterion(crit))
+            .solve(&a, &b, &mut x2)
+            .unwrap();
+        assert_eq!(r.iterations, r2.iterations);
+        assert_eq!(x.as_slice(), x2.as_slice());
+    }
+
+    #[test]
+    fn builder_resilient_path_converges() {
+        let exec = Executor::reference();
+        let (a, b, mut x) = poisson_setup(&exec);
+        let r = SolverBuilder::cg()
+            .with_criterion(Criterion::residual(1e-10, 500))
+            .resilient()
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(r.converged, "{r:?}");
+    }
+
+    #[test]
+    fn builder_solve_data_uses_autotuner() {
+        let exec = Executor::reference();
+        let data = laplace_2d::<f64>(10, 10);
+        let n = data.dim.rows;
+        let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let r = SolverBuilder::cg()
+            .with_criterion(Criterion::residual(1e-10, 500))
+            .solve_data(&exec, &data, &b, &mut x)
+            .unwrap();
+        assert!(r.converged, "{r:?}");
+    }
+}

@@ -98,6 +98,7 @@ impl<T: Value> Solver<T> for Cgs {
             blas::axpy(&exec, -alpha, &auq, &mut r)?;
             resnorm = blas::norm2(&exec, &r)?.as_f64();
             iters += 1;
+            crate::observe::solver_iteration("cgs", iters, resnorm);
             if self.config.record_history {
                 history.push(resnorm);
             }

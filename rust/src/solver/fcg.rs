@@ -106,6 +106,7 @@ impl<T: Value> Solver<T> for Fcg<T> {
             blas::axpby(&exec, T::one(), &z, beta, &mut p)?;
             resnorm = blas::norm2(&exec, &r)?.as_f64();
             iters += 1;
+            crate::observe::solver_iteration("fcg", iters, resnorm);
             if self.config.record_history {
                 history.push(resnorm);
             }

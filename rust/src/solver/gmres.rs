@@ -135,6 +135,7 @@ impl<T: Value> Solver<T> for Gmres {
                 inner = j + 1;
                 total_iters += 1;
                 resnorm = g[j + 1].as_f64().abs();
+                crate::observe::solver_iteration("gmres", total_iters, resnorm);
                 if self.config.record_history {
                     history.push(resnorm);
                 }

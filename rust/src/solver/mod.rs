@@ -12,6 +12,7 @@
 //! the composed drivers here.
 
 mod bicgstab;
+mod builder;
 mod cg;
 mod cgs;
 mod fcg;
@@ -21,6 +22,7 @@ mod ir;
 mod richardson;
 
 pub use bicgstab::BiCgStab;
+pub use builder::SolverBuilder;
 pub use cg::Cg;
 pub use cgs::Cgs;
 pub use fcg::Fcg;

@@ -88,6 +88,7 @@ impl<T: Value> Solver<T> for Richardson<T> {
                 None => blas::axpy(&exec, self.omega, &r, x)?,
             }
             iters += 1;
+            crate::observe::solver_iteration("richardson", iters, resnorm);
         }
     }
 

@@ -1,0 +1,294 @@
+//! Integration tests for the observe layer: event ordering and
+//! nesting under a real solve, JSON-lines round-trip, roofline
+//! efficiency on the host backend, and the zero-cost disabled path.
+//!
+//! The logger slot is global, so every test that installs one holds
+//! `LOCK` for its whole body — the tests in this binary serialize
+//! instead of racing each other's events.
+
+use std::sync::{Arc, Mutex};
+
+use sparkle::core::executor::Executor;
+use sparkle::core::types::Precision;
+use sparkle::matgen::stencil;
+use sparkle::observe::{self, Event, JsonlLogger, KernelClass, NullLogger, Profile, Record};
+use sparkle::perfmodel::Device;
+use sparkle::solver::SolverBuilder;
+use sparkle::stop::Criterion;
+use sparkle::{Dense, Dim2};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn poisson(exec: &Arc<Executor>) -> (sparkle::Csr<f64>, Dense<f64>, Dense<f64>) {
+    let data = stencil::laplace_2d::<f64>(16, 16);
+    let n = data.dim.rows;
+    let a = sparkle::Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    (a, b, x)
+}
+
+fn builder() -> SolverBuilder<f64> {
+    SolverBuilder::cg().with_criterion(Criterion::residual(1e-10, 500))
+}
+
+/// Acceptance criterion: an instrumented CG solve produces a properly
+/// ordered, properly nested event stream.
+#[test]
+fn solve_emits_ordered_nested_events() {
+    let _lock = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let exec = Executor::par_with_threads(2);
+    let (a, b, mut x) = poisson(&exec);
+    let rec = Arc::new(Record::new());
+    let result = builder()
+        .with_logger(rec.clone())
+        .solve(&a, &b, &mut x)
+        .unwrap();
+    assert!(result.converged, "{result:?}");
+    assert!(
+        !observe::enabled(),
+        "scoped logger must be uninstalled after the solve"
+    );
+
+    let events = rec.events();
+    assert!(matches!(events.first(), Some(Event::SolverStart { .. })));
+    assert!(matches!(events.last(), Some(Event::SolverDone { .. })));
+
+    // kernel start/stop must pair up without nesting (guards sit at
+    // dispatch leaves only)
+    let mut depth = 0usize;
+    let mut iter_seen = 0usize;
+    for e in &events {
+        match e {
+            Event::KernelStart { .. } => {
+                depth += 1;
+                assert_eq!(depth, 1, "kernel events must not nest: {e:?}");
+            }
+            Event::KernelStop { seconds, .. } => {
+                assert_eq!(depth, 1, "stop without start: {e:?}");
+                depth -= 1;
+                assert!(*seconds >= 0.0 && seconds.is_finite());
+            }
+            Event::SolverIteration {
+                solver, iteration, ..
+            } => {
+                assert_eq!(solver, "cg");
+                iter_seen += 1;
+                assert_eq!(*iteration, iter_seen, "iterations must be consecutive");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "every kernel start must be stopped");
+    assert_eq!(iter_seen, result.iterations);
+    match events.last() {
+        Some(Event::SolverDone {
+            iterations,
+            converged,
+            ..
+        }) => {
+            assert_eq!(*iterations, result.iterations);
+            assert!(*converged);
+        }
+        other => panic!("expected SolverDone, got {other:?}"),
+    }
+}
+
+/// Acceptance criterion: every event variant survives the JSON-lines
+/// sink byte-exactly.
+#[test]
+fn jsonl_sink_round_trips_every_variant() {
+    let samples = vec![
+        Event::KernelStart {
+            class: KernelClass::Spmv,
+            name: "csr".to_string(),
+        },
+        Event::KernelStop {
+            class: KernelClass::Spmv,
+            name: "csr".to_string(),
+            exec: "par".to_string(),
+            seconds: 1.25e-5,
+            flops: 9800.0,
+            bytes: 74804.0,
+        },
+        Event::SolverStart {
+            solver: "cg".to_string(),
+            rows: 256,
+        },
+        Event::SolverIteration {
+            solver: "cg".to_string(),
+            iteration: 7,
+            resnorm: 3.2e-4,
+        },
+        Event::SolverDone {
+            solver: "cg".to_string(),
+            iterations: 41,
+            converged: true,
+            resnorm: 8.1e-11,
+        },
+        Event::Checkpoint {
+            solver: "bicgstab".to_string(),
+            at_iter: 25,
+            true_resnorm: 1.7e-3,
+        },
+        Event::Rollback {
+            solver: "cg".to_string(),
+            reason: "breakdown: ZeroDenominator { what: \"p·Ap\" }".to_string(),
+        },
+        Event::Drift {
+            solver: "cgs".to_string(),
+            recurrence: 1e-9,
+            true_resnorm: 1e-2,
+        },
+        Event::Fallback {
+            from: "cg".to_string(),
+            to: "bicgstab".to_string(),
+        },
+        Event::AutotuneCandidate {
+            format: "ell".to_string(),
+            median_us: 12.75,
+            applies: 7,
+        },
+        Event::AutotuneDecision {
+            format: "csr".to_string(),
+            source: "measured".to_string(),
+            predicted_us: 10.5,
+        },
+        Event::Launch {
+            artifact: "spmv_csr_f64_b4096".to_string(),
+            seconds: 2.5e-4,
+            ok: true,
+        },
+        Event::Retry {
+            what: "execute".to_string(),
+            attempt: 2,
+        },
+        Event::BreakerOpen { failures: 3 },
+    ];
+    let sink = JsonlLogger::in_memory();
+    for e in &samples {
+        use sparkle::observe::Logger as _;
+        sink.log(e);
+    }
+    let lines = sink.lines();
+    assert_eq!(lines.len(), samples.len());
+    for (line, expect) in lines.iter().zip(&samples) {
+        let parsed = Event::from_json_line(line)
+            .unwrap_or_else(|| panic!("unparseable line: {line}"));
+        assert_eq!(&parsed, expect, "round-trip mismatch for {line}");
+    }
+}
+
+/// Acceptance criterion: the aggregated Profile of a host-backend CG
+/// solve reports SpMV roofline efficiency in (0, 1].
+#[test]
+fn profile_reports_spmv_efficiency_in_unit_interval() {
+    let _lock = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let exec = Executor::par_with_threads(2);
+    let (a, b, mut x) = poisson(&exec);
+    let rec = Arc::new(Record::new());
+    let result = builder()
+        .with_logger(rec.clone())
+        .solve(&a, &b, &mut x)
+        .unwrap();
+    assert!(result.converged);
+
+    let profile = Profile::from_events(&rec.events(), Device::Gen12, Precision::Double);
+    let roofline = profile.roofline();
+    let spmv: Vec<_> = profile
+        .kernels
+        .iter()
+        .filter(|k| k.class == KernelClass::Spmv)
+        .collect();
+    assert!(!spmv.is_empty(), "CG must have run SpMV kernels");
+    for k in spmv {
+        let eff = k
+            .efficiency(&roofline, profile.precision)
+            .expect("spmv has a flop model");
+        assert!(
+            eff > 0.0 && eff <= 1.0,
+            "efficiency out of (0,1]: {eff} for {k:?}"
+        );
+    }
+    assert_eq!(profile.iterations, result.iterations);
+    assert!(profile.converged);
+    let json = profile.to_json();
+    assert!(json.contains("\"schema\": \"sparkle/observe/v1\""));
+    assert!(json.contains("\"class\": \"spmv\""));
+}
+
+/// Acceptance criterion: with no logger (or the NullLogger) the event
+/// path does no work — the emit closure is never even called.
+#[test]
+fn disabled_logger_adds_no_events_and_no_work() {
+    let _lock = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+    // no logger installed: closure must not run
+    let mut ran = false;
+    observe::emit(|| {
+        ran = true;
+        Event::BreakerOpen { failures: 0 }
+    });
+    assert!(!ran, "emit closure ran with no logger installed");
+
+    // NullLogger installed: still disabled, closure still must not run
+    {
+        let _scope = observe::install_scoped(Arc::new(NullLogger));
+        assert!(!observe::enabled());
+        let mut ran = false;
+        observe::emit(|| {
+            ran = true;
+            Event::BreakerOpen { failures: 0 }
+        });
+        assert!(!ran, "emit closure ran under NullLogger");
+    }
+
+    // a Record captures a solve; re-running the same solve under a
+    // nested NullLogger scope adds nothing
+    let exec = Executor::par_with_threads(2);
+    let (a, b, mut x) = poisson(&exec);
+    let rec = Arc::new(Record::new());
+    {
+        let _scope = observe::install_scoped(rec.clone());
+        builder().solve(&a, &b, &mut x).unwrap();
+        let count = rec.len();
+        assert!(count > 0);
+        {
+            let _null = observe::install_scoped(Arc::new(NullLogger));
+            let mut x2 = Dense::zeros(exec.clone(), Dim2::new(x.len(), 1));
+            builder().solve(&a, &b, &mut x2).unwrap();
+        }
+        assert_eq!(rec.len(), count, "NullLogger scope must add no events");
+    }
+    assert!(!observe::enabled());
+}
+
+/// `solve_data` installs the logger before format selection runs, so
+/// autotune candidate/decision events are captured alongside the
+/// solve's own events.
+#[test]
+fn builder_solve_data_captures_autotune_events() {
+    let _lock = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let exec = Executor::par_with_threads(2);
+    let data = stencil::laplace_2d::<f64>(16, 16);
+    let n = data.dim.rows;
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let rec = Arc::new(Record::new());
+    let result = builder()
+        .with_logger(rec.clone())
+        .solve_data(&exec, &data, &b, &mut x)
+        .unwrap();
+    assert!(result.converged);
+
+    let events = rec.events();
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, Event::AutotuneDecision { .. })),
+        "solve_data must emit the format decision"
+    );
+    let profile = Profile::from_events(&events, Device::Gen12, Precision::Double);
+    assert!(profile.autotune_format.is_some());
+    assert!(profile.autotune_source.is_some());
+}
