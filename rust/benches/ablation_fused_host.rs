@@ -1,0 +1,233 @@
+//! Ablation: fused host kernels vs the composed BLAS-1/SpMV baseline.
+//!
+//! Runs fixed-iteration CG and BiCGSTAB solves over the matgen suite on
+//! the `par` executor twice through the *same* driver code: once with
+//! the fused kernels disabled (composed baseline) and once enabled. The
+//! fused kernels are bit-identical to the composed sequences, so any
+//! difference is purely memory traffic. Reports the per-matrix speedup
+//! `composed/fused` and the geometric mean; the smoke gate fails if
+//! fused is more than 5 % slower than composed anywhere. Also verifies
+//! the solver workspace performs zero pool misses (= zero Dense
+//! allocations) on repeated solves after warm-up.
+//!
+//! Emits `BENCH_fused_host.json` (machine-readable) next to the table.
+
+use std::io::Write as _;
+
+use sparkle::bench_util::{bench_scale, f2, spmv_suite, Table, Timer};
+use sparkle::core::executor::Executor;
+use sparkle::kernels::set_fused_enabled;
+use sparkle::matrix::{Csr, Dense};
+use sparkle::resilience::BreakdownPolicy;
+use sparkle::solver::{workspace as ws, BiCgStab, Cg, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::Dim2;
+
+const JSON_PATH: &str = "BENCH_fused_host.json";
+const ITERS: usize = 25;
+
+struct Row {
+    matrix: String,
+    solver: &'static str,
+    n: usize,
+    nnz: usize,
+    composed_us: f64,
+    fused_us: f64,
+    ratio: f64,
+}
+
+fn solver_config() -> SolverConfig {
+    // fixed iteration budget: both variants do the identical work; a
+    // lenient breakdown policy keeps the stagnation window out of the
+    // timing loop
+    let mut cfg = SolverConfig::with_criterion(Criterion::iterations(ITERS));
+    cfg.breakdown = BreakdownPolicy::lenient();
+    cfg
+}
+
+fn time_solver(
+    timer: &Timer,
+    solver: &dyn Solver<f64>,
+    a: &Csr<f64>,
+    b: &Dense<f64>,
+    x: &mut Dense<f64>,
+) -> (f64, f64) {
+    // warm the workspace pool outside the timed region so neither
+    // variant pays the cold-start allocations
+    x.fill(0.0);
+    solver.solve(a, b, x).unwrap();
+
+    set_fused_enabled(false);
+    let composed = timer.run(|| {
+        x.fill(0.0);
+        solver.solve(a, b, x).unwrap();
+    });
+    set_fused_enabled(true);
+    let fused = timer.run(|| {
+        x.fill(0.0);
+        solver.solve(a, b, x).unwrap();
+    });
+    (composed.median * 1e6, fused.median * 1e6)
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: fused host kernels vs composed baseline ==");
+    println!("   (par executor, matgen suite, scale {scale}, {ITERS} fixed iters)\n");
+    let exec = Executor::par();
+    let timer = Timer::default();
+
+    let suite = spmv_suite::<f64>(scale);
+    let mut rows: Vec<Row> = Vec::new();
+    for m in &suite {
+        let n = m.data.dim.rows;
+
+        // CG needs SPD: symmetrized + shifted copy
+        let mut spd = m.data.clone();
+        spd.symmetrize();
+        spd.shift_diagonal(1.0);
+        // BiCGSTAB handles general systems; shift keeps it dominant
+        let mut gen = m.data.clone();
+        gen.shift_diagonal(1.0);
+
+        let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+
+        let cases: Vec<(&'static str, Box<dyn Solver<f64>>, Csr<f64>)> = vec![
+            (
+                "cg",
+                Box::new(Cg::<f64>::new(solver_config())),
+                Csr::from_data(exec.clone(), &spd).unwrap(),
+            ),
+            (
+                "bicgstab",
+                Box::new(BiCgStab::new(solver_config())),
+                Csr::from_data(exec.clone(), &gen).unwrap(),
+            ),
+        ];
+        for (name, solver, a) in &cases {
+            let (composed_us, fused_us) = time_solver(&timer, solver.as_ref(), a, &b, &mut x);
+            rows.push(Row {
+                matrix: m.name.clone(),
+                solver: *name,
+                n,
+                nnz: a.nnz(),
+                composed_us,
+                fused_us,
+                ratio: composed_us / fused_us.max(1e-12),
+            });
+        }
+    }
+
+    let mut t = Table::new(&["matrix", "solver", "n", "composed µs", "fused µs", "speedup"]);
+    for r in &rows {
+        t.row(&[
+            r.matrix.clone(),
+            r.solver.to_string(),
+            r.n.to_string(),
+            f2(r.composed_us),
+            f2(r.fused_us),
+            f2(r.ratio),
+        ]);
+    }
+    t.print();
+
+    let geomean = (rows.iter().map(|r| r.ratio.max(1e-12).ln()).sum::<f64>()
+        / rows.len().max(1) as f64)
+        .exp();
+    let worst = rows
+        .iter()
+        .map(|r| r.ratio)
+        .fold(f64::INFINITY, f64::min);
+    println!("\ngeomean composed/fused speedup: {geomean:.3} (worst {worst:.3})");
+    println!(
+        "target (geomean >= 1.15): {}",
+        if geomean >= 1.15 { "PASS" } else { "MISS" }
+    );
+
+    // repeated-solve workspace check: zero pool misses after warm-up
+    let misses = workspace_misses_after_warmup(&exec, scale);
+    println!(
+        "workspace misses after warm-up: {misses} ({})",
+        if misses == 0 { "PASS" } else { "FAIL" }
+    );
+
+    write_json(&rows, scale, geomean, worst, misses).expect("write BENCH_fused_host.json");
+    println!("wrote {JSON_PATH}");
+
+    // smoke gate: fused must never be > 5 % slower than composed, and
+    // warm solves must be allocation-free
+    if worst < 0.95 {
+        eprintln!("FAIL: fused slower than composed by > 5 % (worst ratio {worst:.3})");
+        std::process::exit(1);
+    }
+    if misses > 0 {
+        eprintln!("FAIL: {misses} workspace misses on warm solves");
+        std::process::exit(1);
+    }
+}
+
+/// Warm one solve shape, then count pool misses over repeated solves.
+fn workspace_misses_after_warmup(
+    exec: &std::sync::Arc<Executor>,
+    scale: usize,
+) -> u64 {
+    let suite = spmv_suite::<f64>(scale);
+    let m = &suite[0];
+    let n = m.data.dim.rows;
+    let mut spd = m.data.clone();
+    spd.symmetrize();
+    spd.shift_diagonal(1.0);
+    let a = Csr::from_data(exec.clone(), &spd).unwrap();
+    let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
+    let solver = Cg::new(solver_config());
+
+    ws::clear();
+    let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    solver.solve(&a, &b, &mut x).unwrap(); // warm-up populates the pool
+    ws::reset_stats();
+    for _ in 0..5 {
+        x.fill(0.0);
+        solver.solve(&a, &b, &mut x).unwrap();
+    }
+    let (_, misses) = ws::stats();
+    misses
+}
+
+/// Hand-rolled JSON (no serde in the dependency closure).
+fn write_json(
+    rows: &[Row],
+    scale: usize,
+    geomean: f64,
+    worst: f64,
+    ws_misses: u64,
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"sparkle/ablation_fused_host/v1\",\n");
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str("  \"executor\": \"par\",\n");
+    s.push_str("  \"precision\": \"f64\",\n");
+    s.push_str(&format!("  \"fixed_iters\": {ITERS},\n"));
+    s.push_str("  \"cases\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!("\"matrix\": \"{}\", ", r.matrix));
+        s.push_str(&format!("\"solver\": \"{}\", ", r.solver));
+        s.push_str(&format!("\"n\": {}, ", r.n));
+        s.push_str(&format!("\"nnz\": {}, ", r.nnz));
+        s.push_str(&format!("\"composed_us\": {:.3}, ", r.composed_us));
+        s.push_str(&format!("\"fused_us\": {:.3}, ", r.fused_us));
+        s.push_str(&format!("\"ratio\": {:.4}", r.ratio));
+        s.push_str(if i + 1 == rows.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"geomean_ratio\": {geomean:.4},\n"));
+    s.push_str(&format!("  \"worst_ratio\": {worst:.4},\n"));
+    s.push_str(&format!("  \"workspace_misses_after_warmup\": {ws_misses},\n"));
+    s.push_str(&format!("  \"acceptance_1p15\": {},\n", geomean >= 1.15));
+    s.push_str(&format!("  \"smoke_0p95\": {}\n", worst >= 0.95));
+    s.push_str("}\n");
+    let mut f = std::fs::File::create(JSON_PATH)?;
+    f.write_all(s.as_bytes())
+}

@@ -306,6 +306,10 @@ impl<T: Value> LinOp<T> for AutoMatrix<T> {
         self.as_linop().apply_advanced(alpha, b, beta, x)
     }
 
+    fn apply_dot(&self, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> Result<(T, T)> {
+        self.as_linop().apply_dot(b, x, w)
+    }
+
     fn op_name(&self) -> &'static str {
         "auto"
     }

@@ -42,6 +42,17 @@ pub trait LinOp<T: Value> {
         Ok(())
     }
 
+    /// x = A · b, returning `(w·x, x·x)` — the dominant Krylov pattern
+    /// (`q = A p` with `p·q`, or `t = A s` with `t·s` and `t·t`).
+    ///
+    /// Default implementation composes `apply` with `dot_norm2`; the
+    /// sparse formats override it with a fused SpMV+reduction kernel
+    /// that reads `x` once instead of twice.
+    fn apply_dot(&self, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> Result<(T, T)> {
+        self.apply(b, x)?;
+        crate::kernels::blas::dot_norm2(self.executor(), w, x)
+    }
+
     /// Human-readable operator name for logs and benches.
     fn op_name(&self) -> &'static str {
         "linop"

@@ -16,6 +16,7 @@ use crate::core::types::Value;
 use crate::kernels::{par, reference, xla};
 use crate::matrix::dense::Dense;
 use crate::observe;
+use crate::perfmodel::traffic::FusedBlasKind;
 
 fn check_same_len<T: Value>(op: &'static str, x: &Dense<T>, y: &Dense<T>) -> Result<()> {
     if x.shape() != y.shape() {
@@ -168,6 +169,354 @@ pub fn ew_mul<T: Value>(
         }
     }
     Ok(())
+}
+
+// ----------------------------------------------------------- fused BLAS-1
+//
+// Each entry has a fused arm for the host backends (Reference/Par) and
+// a composed fallback used when `kernels::set_fused_enabled(false)` or
+// when the executor lacks a fused impl (Xla — its iteration-body fusion
+// lives in `solver/fused.rs`). Fused and composed are bit-identical per
+// executor, so the toggle only changes memory sweeps, never results.
+// Guards: the fused arms carry a `FusedBlasKind` model crediting the
+// reduced byte count; the composed path is covered by its inner calls'
+// guards (no double counting).
+
+/// Observe guard for a fused kernel over length-`n` vectors.
+#[inline]
+fn fused_guard<T: Value>(
+    kind: FusedBlasKind,
+    exec: &Arc<Executor>,
+    n: usize,
+) -> Option<observe::KernelGuard> {
+    observe::fused_blas_guard(kind, exec.name(), n, T::PRECISION)
+}
+
+fn composed_dot_norm2<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result<(T, T)> {
+    Ok((dot(exec, x, y)?, dot(exec, y, y)?))
+}
+
+/// `(x·y, y·y)` in one sweep (replaces two `dot` calls).
+pub fn dot_norm2<T: Value>(exec: &Arc<Executor>, x: &Dense<T>, y: &Dense<T>) -> Result<(T, T)> {
+    check_same_len("dot_norm2", x, y)?;
+    if !super::fused_enabled() {
+        return composed_dot_norm2(exec, x, y);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::DotNorm2, exec, x.len());
+            Ok(reference::dot_norm2(x.as_slice(), y.as_slice()))
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::DotNorm2, exec, x.len());
+            Ok(par::dot_norm2(cfg, x.as_slice(), y.as_slice()))
+        }
+        Executor::Xla(_) => composed_dot_norm2(exec, x, y),
+    }
+}
+
+fn composed_axpy_sub_norm2<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    p: &Dense<T>,
+    q: &Dense<T>,
+    x: &mut Dense<T>,
+    r: &mut Dense<T>,
+) -> Result<T> {
+    axpy(exec, alpha, p, x)?;
+    axpy(exec, -alpha, q, r)?;
+    dot(exec, r, r)
+}
+
+/// `x += α p; r -= α q; return r·r` in one sweep (the CG/CGS update
+/// tail: replaces two `axpy` calls and a `dot`).
+pub fn axpy_sub_norm2<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    p: &Dense<T>,
+    q: &Dense<T>,
+    x: &mut Dense<T>,
+    r: &mut Dense<T>,
+) -> Result<T> {
+    check_same_len("axpy_sub_norm2", p, q)?;
+    check_same_len("axpy_sub_norm2", p, x)?;
+    check_same_len("axpy_sub_norm2", p, r)?;
+    if !super::fused_enabled() {
+        return composed_axpy_sub_norm2(exec, alpha, p, q, x, r);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::AxpySubNorm2, exec, p.len());
+            Ok(reference::axpy_sub_norm2(
+                alpha,
+                p.as_slice(),
+                q.as_slice(),
+                x.as_mut_slice(),
+                r.as_mut_slice(),
+            ))
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::AxpySubNorm2, exec, p.len());
+            Ok(par::axpy_sub_norm2(
+                cfg,
+                alpha,
+                p.as_slice(),
+                q.as_slice(),
+                x.as_mut_slice(),
+                r.as_mut_slice(),
+            ))
+        }
+        Executor::Xla(_) => composed_axpy_sub_norm2(exec, alpha, p, q, x, r),
+    }
+}
+
+fn composed_add_scaled<T: Value>(
+    exec: &Arc<Executor>,
+    z: &Dense<T>,
+    alpha: T,
+    x: &Dense<T>,
+    out: &mut Dense<T>,
+) -> Result<()> {
+    out.copy_from(z)?;
+    axpy(exec, alpha, x, out)
+}
+
+/// `out = z + α x` in one sweep (replaces copy + `axpy`).
+pub fn add_scaled<T: Value>(
+    exec: &Arc<Executor>,
+    z: &Dense<T>,
+    alpha: T,
+    x: &Dense<T>,
+    out: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("add_scaled", z, x)?;
+    check_same_len("add_scaled", z, out)?;
+    if !super::fused_enabled() {
+        return composed_add_scaled(exec, z, alpha, x, out);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::AddScaled, exec, z.len());
+            reference::add_scaled(z.as_slice(), alpha, x.as_slice(), out.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::AddScaled, exec, z.len());
+            par::add_scaled(cfg, z.as_slice(), alpha, x.as_slice(), out.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_add_scaled(exec, z, alpha, x, out),
+    }
+}
+
+fn composed_update_p<T: Value>(
+    exec: &Arc<Executor>,
+    r: &Dense<T>,
+    beta: T,
+    omega: T,
+    v: &Dense<T>,
+    p: &mut Dense<T>,
+) -> Result<()> {
+    axpy(exec, -omega, v, p)?;
+    axpby(exec, T::one(), r, beta, p)
+}
+
+/// BiCGSTAB direction update `p = r + β (p − ω v)` in one sweep
+/// (replaces `axpy` + `axpby`; `β == 0` overwrites `p = r`).
+pub fn update_p<T: Value>(
+    exec: &Arc<Executor>,
+    r: &Dense<T>,
+    beta: T,
+    omega: T,
+    v: &Dense<T>,
+    p: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("update_p", r, v)?;
+    check_same_len("update_p", r, p)?;
+    if !super::fused_enabled() {
+        return composed_update_p(exec, r, beta, omega, v, p);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::UpdateP, exec, r.len());
+            reference::update_p(r.as_slice(), beta, omega, v.as_slice(), p.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::UpdateP, exec, r.len());
+            par::update_p(cfg, r.as_slice(), beta, omega, v.as_slice(), p.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_update_p(exec, r, beta, omega, v, p),
+    }
+}
+
+fn composed_update_p_cgs<T: Value>(
+    exec: &Arc<Executor>,
+    u: &Dense<T>,
+    beta: T,
+    q: &Dense<T>,
+    p: &mut Dense<T>,
+) -> Result<()> {
+    axpby(exec, T::one(), q, beta, p)?;
+    axpby(exec, T::one(), u, beta, p)
+}
+
+/// CGS direction update `p = u + β (q + β p)` in one sweep (replaces
+/// two `axpby` calls; `β == 0` overwrites `p = u`).
+pub fn update_p_cgs<T: Value>(
+    exec: &Arc<Executor>,
+    u: &Dense<T>,
+    beta: T,
+    q: &Dense<T>,
+    p: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("update_p_cgs", u, q)?;
+    check_same_len("update_p_cgs", u, p)?;
+    if !super::fused_enabled() {
+        return composed_update_p_cgs(exec, u, beta, q, p);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::UpdatePCgs, exec, u.len());
+            reference::update_p_cgs(u.as_slice(), beta, q.as_slice(), p.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::UpdatePCgs, exec, u.len());
+            par::update_p_cgs(cfg, u.as_slice(), beta, q.as_slice(), p.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_update_p_cgs(exec, u, beta, q, p),
+    }
+}
+
+fn composed_sub_scaled_norm2<T: Value>(
+    exec: &Arc<Executor>,
+    s: &Dense<T>,
+    omega: T,
+    t: &Dense<T>,
+    r: &mut Dense<T>,
+) -> Result<T> {
+    r.copy_from(s)?;
+    axpy(exec, -omega, t, r)?;
+    dot(exec, r, r)
+}
+
+/// `r = s − ω t; return r·r` in one sweep (the BiCGSTAB residual tail:
+/// replaces copy + `axpy` + `dot`).
+pub fn sub_scaled_norm2<T: Value>(
+    exec: &Arc<Executor>,
+    s: &Dense<T>,
+    omega: T,
+    t: &Dense<T>,
+    r: &mut Dense<T>,
+) -> Result<T> {
+    check_same_len("sub_scaled_norm2", s, t)?;
+    check_same_len("sub_scaled_norm2", s, r)?;
+    if !super::fused_enabled() {
+        return composed_sub_scaled_norm2(exec, s, omega, t, r);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::SubScaledNorm2, exec, s.len());
+            Ok(reference::sub_scaled_norm2(
+                s.as_slice(),
+                omega,
+                t.as_slice(),
+                r.as_mut_slice(),
+            ))
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::SubScaledNorm2, exec, s.len());
+            Ok(par::sub_scaled_norm2(
+                cfg,
+                s.as_slice(),
+                omega,
+                t.as_slice(),
+                r.as_mut_slice(),
+            ))
+        }
+        Executor::Xla(_) => composed_sub_scaled_norm2(exec, s, omega, t, r),
+    }
+}
+
+fn composed_axpy2<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    p: &Dense<T>,
+    omega: T,
+    s: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    axpy(exec, alpha, p, x)?;
+    axpy(exec, omega, s, x)
+}
+
+/// Two stacked axpys `x += α p; x += ω s` in one sweep.
+pub fn axpy2<T: Value>(
+    exec: &Arc<Executor>,
+    alpha: T,
+    p: &Dense<T>,
+    omega: T,
+    s: &Dense<T>,
+    x: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("axpy2", p, s)?;
+    check_same_len("axpy2", p, x)?;
+    if !super::fused_enabled() {
+        return composed_axpy2(exec, alpha, p, omega, s, x);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::Axpy2, exec, p.len());
+            reference::axpy2(alpha, p.as_slice(), omega, s.as_slice(), x.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::Axpy2, exec, p.len());
+            par::axpy2(cfg, alpha, p.as_slice(), omega, s.as_slice(), x.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_axpy2(exec, alpha, p, omega, s, x),
+    }
+}
+
+fn composed_scal_into<T: Value>(
+    exec: &Arc<Executor>,
+    beta: T,
+    x: &Dense<T>,
+    out: &mut Dense<T>,
+) -> Result<()> {
+    out.copy_from(x)?;
+    scal(exec, beta, out)
+}
+
+/// `out = β x` (overwrite; replaces copy + `scal`, and `β == 0` writes
+/// zeros without reading `out`).
+pub fn scal_into<T: Value>(
+    exec: &Arc<Executor>,
+    beta: T,
+    x: &Dense<T>,
+    out: &mut Dense<T>,
+) -> Result<()> {
+    check_same_len("scal_into", x, out)?;
+    if !super::fused_enabled() {
+        return composed_scal_into(exec, beta, x, out);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::ScalInto, exec, x.len());
+            reference::scal_into(beta, x.as_slice(), out.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::ScalInto, exec, x.len());
+            par::scal_into(cfg, beta, x.as_slice(), out.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_scal_into(exec, beta, x, out),
+    }
 }
 
 #[cfg(test)]

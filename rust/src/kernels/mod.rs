@@ -13,3 +13,24 @@ pub mod reference;
 pub mod spmv;
 pub mod stream;
 pub mod xla;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Global switch for the fused host kernels (`dot_norm2`,
+/// `axpy_sub_norm2`, `spmv_dot`, ...). On by default; the ablation
+/// bench flips it off to time the composed baseline through the exact
+/// same driver code. The fused kernels are bit-identical to their
+/// composed sequences per executor, so toggling never changes results —
+/// only the number of memory sweeps.
+static FUSED: AtomicBool = AtomicBool::new(true);
+
+/// Whether fused host kernels are dispatched.
+#[inline]
+pub fn fused_enabled() -> bool {
+    FUSED.load(Ordering::Relaxed)
+}
+
+/// Enable/disable the fused host kernels (ablation baseline switch).
+pub fn set_fused_enabled(on: bool) {
+    FUSED.store(on, Ordering::Relaxed);
+}

@@ -9,7 +9,7 @@
 //! `Arc<Executor>` (non-`Sync` because of the PJRT client), so the
 //! dispatch layer unpacks them before entering scoped threads.
 
-use crate::core::executor::{par_for, par_reduce, ParConfig};
+use crate::core::executor::{par_for, ParConfig};
 use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::reference;
@@ -18,8 +18,118 @@ use crate::matrix::csr::Csr;
 use crate::matrix::dense::Dense;
 use crate::matrix::ell::Ell;
 use crate::matrix::sellp::SellP;
+use crate::vendor_mkl::merge_row_splits;
 
 use crate::kernels::ptr::SlicePtr;
+
+// ------------------------------------------------ deterministic reduce
+//
+// Reductions accumulate per fixed-size block (REDUCE_BLOCK elements),
+// then combine the block partials with a sequential pairwise tree. The
+// block boundaries depend only on the vector length — never on the
+// thread count — so the same input gives the bit-identical result under
+// `threads` = 1, 2 or 64. Threads only race to *fill* disjoint partial
+// slots, which is order-independent.
+
+const REDUCE_BLOCK: usize = 4096;
+
+/// Sequential in-place pairwise fold of block partials.
+fn tree_fold<T: Value>(v: &mut [T]) -> T {
+    let mut len = v.len();
+    if len == 0 {
+        return T::zero();
+    }
+    while len > 1 {
+        let half = len / 2;
+        for i in 0..half {
+            v[i] = v[2 * i] + v[2 * i + 1];
+        }
+        if len % 2 == 1 {
+            v[half] = v[len - 1];
+            len = half + 1;
+        } else {
+            len = half;
+        }
+    }
+    v[0]
+}
+
+/// Blocked deterministic reduction: `block(s, e)` computes the partial
+/// for elements `[s, e)`; partials are combined in fixed tree order.
+fn blocked_reduce<T: Value>(
+    cfg: &ParConfig,
+    n: usize,
+    block: impl Fn(usize, usize) -> T + Sync,
+) -> T {
+    if n == 0 {
+        return T::zero();
+    }
+    let nblocks = n.div_ceil(REDUCE_BLOCK);
+    let mut partials = vec![T::zero(); nblocks];
+    let fill = |b0: usize, b1: usize, out: &mut [T]| {
+        for (slot, bk) in out.iter_mut().zip(b0..b1) {
+            let s = bk * REDUCE_BLOCK;
+            let e = (s + REDUCE_BLOCK).min(n);
+            *slot = block(s, e);
+        }
+    };
+    if cfg.effective_threads() <= 1 || n <= cfg.seq_threshold || nblocks == 1 {
+        fill(0, nblocks, &mut partials);
+    } else {
+        // gate on n (not nblocks) ourselves, then let par_for split blocks
+        let inner = ParConfig {
+            threads: cfg.effective_threads(),
+            seq_threshold: 0,
+        };
+        let pptr = SlicePtr(partials.as_mut_ptr());
+        par_for(&inner, nblocks, |_, b0, b1| {
+            // SAFETY: block index ranges are disjoint across threads.
+            fill(b0, b1, unsafe { pptr.range(b0, b1 - b0) });
+        });
+    }
+    tree_fold(&mut partials)
+}
+
+/// Like [`blocked_reduce`] but for kernels producing two reductions per
+/// sweep (e.g. `dot_norm2`). Both results are thread-count independent.
+fn blocked_reduce2<T: Value>(
+    cfg: &ParConfig,
+    n: usize,
+    block: impl Fn(usize, usize) -> (T, T) + Sync,
+) -> (T, T) {
+    if n == 0 {
+        return (T::zero(), T::zero());
+    }
+    let nblocks = n.div_ceil(REDUCE_BLOCK);
+    let mut pa = vec![T::zero(); nblocks];
+    let mut pb = vec![T::zero(); nblocks];
+    let fill = |b0: usize, b1: usize, oa: &mut [T], ob: &mut [T]| {
+        for (i, bk) in (b0..b1).enumerate() {
+            let s = bk * REDUCE_BLOCK;
+            let e = (s + REDUCE_BLOCK).min(n);
+            let (u, v) = block(s, e);
+            oa[i] = u;
+            ob[i] = v;
+        }
+    };
+    if cfg.effective_threads() <= 1 || n <= cfg.seq_threshold || nblocks == 1 {
+        fill(0, nblocks, &mut pa, &mut pb);
+    } else {
+        let inner = ParConfig {
+            threads: cfg.effective_threads(),
+            seq_threshold: 0,
+        };
+        let aptr = SlicePtr(pa.as_mut_ptr());
+        let bptr = SlicePtr(pb.as_mut_ptr());
+        par_for(&inner, nblocks, |_, b0, b1| {
+            // SAFETY: block index ranges are disjoint across threads.
+            let oa = unsafe { aptr.range(b0, b1 - b0) };
+            let ob = unsafe { bptr.range(b0, b1 - b0) };
+            fill(b0, b1, oa, ob);
+        });
+    }
+    (tree_fold(&mut pa), tree_fold(&mut pb))
+}
 
 // ---------------------------------------------------------------- BLAS-1
 
@@ -52,16 +162,11 @@ pub fn scal<T: Value>(cfg: &ParConfig, beta: T, x: &mut [T]) {
     });
 }
 
-/// Dot product (per-thread partials combined in thread order, so the
-/// result is deterministic for a fixed thread count).
+/// Dot product. Partials accumulate per fixed 4096-element block and
+/// combine in a sequential pairwise tree, so the result is bit-identical
+/// for *any* `ParConfig` thread count (determinism regression-tested).
 pub fn dot<T: Value>(cfg: &ParConfig, x: &[T], y: &[T]) -> T {
-    par_reduce(
-        cfg,
-        x.len(),
-        T::zero(),
-        |s, e| reference::dot(&x[s..e], &y[s..e]),
-        |a, b| a + b,
-    )
+    blocked_reduce(cfg, x.len(), |s, e| reference::dot(&x[s..e], &y[s..e]))
 }
 
 /// Euclidean norm.
@@ -78,9 +183,97 @@ pub fn ew_mul<T: Value>(cfg: &ParConfig, x: &[T], y: &[T], z: &mut [T]) {
     });
 }
 
+// ---------------------------------------------------------- fused BLAS-1
+//
+// Same contracts as the `reference` fused kernels; block partials use
+// the exact blocks `dot` uses, so fused == composed bitwise on this
+// backend too, and every reduction is thread-count independent.
+
+/// `(x·y, y·y)` in one sweep.
+pub fn dot_norm2<T: Value>(cfg: &ParConfig, x: &[T], y: &[T]) -> (T, T) {
+    blocked_reduce2(cfg, x.len(), |s, e| reference::dot_norm2(&x[s..e], &y[s..e]))
+}
+
+/// `x += alpha p; r -= alpha q; return r·r` in one sweep.
+pub fn axpy_sub_norm2<T: Value>(
+    cfg: &ParConfig,
+    alpha: T,
+    p: &[T],
+    q: &[T],
+    x: &mut [T],
+    r: &mut [T],
+) -> T {
+    let xptr = SlicePtr(x.as_mut_ptr());
+    let rptr = SlicePtr(r.as_mut_ptr());
+    blocked_reduce(cfg, p.len(), |s, e| {
+        // SAFETY: reduce blocks are disjoint across threads.
+        let xs = unsafe { xptr.range(s, e - s) };
+        let rs = unsafe { rptr.range(s, e - s) };
+        reference::axpy_sub_norm2(alpha, &p[s..e], &q[s..e], xs, rs)
+    })
+}
+
+/// `out = z + alpha x` in one sweep.
+pub fn add_scaled<T: Value>(cfg: &ParConfig, z: &[T], alpha: T, x: &[T], out: &mut [T]) {
+    let ptr = SlicePtr(out.as_mut_ptr());
+    par_for(cfg, z.len(), |_, s, e| {
+        let o = unsafe { ptr.range(s, e - s) };
+        reference::add_scaled(&z[s..e], alpha, &x[s..e], o);
+    });
+}
+
+/// BiCGSTAB direction update `p = r + beta (p - omega v)` in one sweep.
+pub fn update_p<T: Value>(cfg: &ParConfig, r: &[T], beta: T, omega: T, v: &[T], p: &mut [T]) {
+    let ptr = SlicePtr(p.as_mut_ptr());
+    par_for(cfg, r.len(), |_, s, e| {
+        let ps = unsafe { ptr.range(s, e - s) };
+        reference::update_p(&r[s..e], beta, omega, &v[s..e], ps);
+    });
+}
+
+/// CGS direction update `p = u + beta (q + beta p)` in one sweep.
+pub fn update_p_cgs<T: Value>(cfg: &ParConfig, u: &[T], beta: T, q: &[T], p: &mut [T]) {
+    let ptr = SlicePtr(p.as_mut_ptr());
+    par_for(cfg, u.len(), |_, s, e| {
+        let ps = unsafe { ptr.range(s, e - s) };
+        reference::update_p_cgs(&u[s..e], beta, &q[s..e], ps);
+    });
+}
+
+/// `r = s - omega t; return r·r` in one sweep.
+pub fn sub_scaled_norm2<T: Value>(cfg: &ParConfig, s: &[T], omega: T, t: &[T], r: &mut [T]) -> T {
+    let rptr = SlicePtr(r.as_mut_ptr());
+    blocked_reduce(cfg, s.len(), |b0, b1| {
+        // SAFETY: reduce blocks are disjoint across threads.
+        let rs = unsafe { rptr.range(b0, b1 - b0) };
+        reference::sub_scaled_norm2(&s[b0..b1], omega, &t[b0..b1], rs)
+    })
+}
+
+/// Two stacked axpys `x += alpha p; x += omega s` in one sweep.
+pub fn axpy2<T: Value>(cfg: &ParConfig, alpha: T, p: &[T], omega: T, s: &[T], x: &mut [T]) {
+    let ptr = SlicePtr(x.as_mut_ptr());
+    par_for(cfg, p.len(), |_, b0, b1| {
+        let xs = unsafe { ptr.range(b0, b1 - b0) };
+        reference::axpy2(alpha, &p[b0..b1], omega, &s[b0..b1], xs);
+    });
+}
+
+/// `out = beta * x` (overwrite; `beta == 0` writes zeros, no NaN leak).
+pub fn scal_into<T: Value>(cfg: &ParConfig, beta: T, x: &[T], out: &mut [T]) {
+    let ptr = SlicePtr(out.as_mut_ptr());
+    par_for(cfg, x.len(), |_, s, e| {
+        let o = unsafe { ptr.range(s, e - s) };
+        reference::scal_into(beta, &x[s..e], o);
+    });
+}
+
 // ------------------------------------------------------------------ SpMV
 
-/// CSR SpMV, rows split across threads.
+/// CSR SpMV, rows split across threads at merge-grid diagonals so each
+/// thread owns roughly equal *work* (rows + nonzeros, whole rows only).
+/// A power-law row no longer serializes its neighbors' chunks. Results
+/// are bit-identical to the reference kernel for any split.
 pub fn csr_spmv_advanced<T: Value>(
     cfg: &ParConfig,
     alpha: T,
@@ -91,12 +284,13 @@ pub fn csr_spmv_advanced<T: Value>(
 ) {
     let nrhs = b.shape().cols;
     let nrows = a.shape().rows;
+    let nnz = a.nnz();
     let row_ptrs = a.row_ptrs();
     let col_idxs = a.col_idxs();
     let values = a.values();
     let bs = b.as_slice();
     let xptr = SlicePtr(x.as_mut_slice().as_mut_ptr());
-    par_for(cfg, nrows, |_, rs, re| {
+    let row_range = |rs: usize, re: usize| {
         for i in rs..re {
             for c in 0..nrhs {
                 let mut acc = T::zero();
@@ -111,6 +305,22 @@ pub fn csr_spmv_advanced<T: Value>(
                     alpha * acc + beta * *xv
                 };
             }
+        }
+    };
+    let threads = cfg.effective_threads().max(1);
+    if threads == 1 || nrows <= cfg.seq_threshold || nnz == 0 {
+        row_range(0, nrows);
+        return;
+    }
+    let splits = merge_row_splits(row_ptrs, nnz, threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let (rs, re) = (splits[t], splits[t + 1]);
+            if rs >= re {
+                continue;
+            }
+            let row_range = &row_range;
+            s.spawn(move || row_range(rs, re));
         }
     });
 }
@@ -232,6 +442,49 @@ pub fn sellp_spmv<T: Value>(cfg: &ParConfig, a: &SellP<T>, b: &Dense<T>, x: &mut
     });
 }
 
+// ------------------------------------------------------- fused SpMV+dot
+//
+// `x = A b` followed by a blocked `(w·x, x·x)` sweep. The reductions are
+// a separate pass (fusing them into per-thread SpMV chunks would make
+// the sum order depend on the split), but the pair still reads x once
+// where the composed path reads it twice.
+
+/// CSR SpMV fused with two reductions: `x = A b`, returns `(w·x, x·x)`.
+pub fn csr_spmv_dot<T: Value>(
+    cfg: &ParConfig,
+    a: &Csr<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> (T, T) {
+    csr_spmv_advanced(cfg, T::one(), a, T::zero(), b, x);
+    dot_norm2(cfg, w.as_slice(), x.as_slice())
+}
+
+/// ELL SpMV fused with two reductions: `x = A b`, returns `(w·x, x·x)`.
+pub fn ell_spmv_dot<T: Value>(
+    cfg: &ParConfig,
+    a: &Ell<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> (T, T) {
+    ell_spmv(cfg, a, b, x);
+    dot_norm2(cfg, w.as_slice(), x.as_slice())
+}
+
+/// SELL-P SpMV fused with two reductions: `x = A b`, returns `(w·x, x·x)`.
+pub fn sellp_spmv_dot<T: Value>(
+    cfg: &ParConfig,
+    a: &SellP<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> (T, T) {
+    sellp_spmv(cfg, a, b, x);
+    dot_norm2(cfg, w.as_slice(), x.as_slice())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,5 +601,177 @@ mod tests {
         sellp_spmv(&cfg(), &sellp, &b, &mut x3);
         reference::sellp_spmv(&sellp, &b, &mut x2);
         assert_eq!(x3.as_slice(), x2.as_slice());
+    }
+
+    #[test]
+    fn dot_is_thread_count_independent() {
+        // n large enough for several 4096-blocks; seq_threshold 0 forces
+        // the parallel fill for every thread count > 1
+        let mut rng = Prng::new(9);
+        let n = 20_000;
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c = |t| ParConfig {
+            threads: t,
+            seq_threshold: 0,
+        };
+        let d1 = dot(&c(1), &x, &y);
+        let d2 = dot(&c(2), &x, &y);
+        let d8 = dot(&c(8), &x, &y);
+        assert_eq!(d1, d2);
+        assert_eq!(d1, d8);
+        let (a1, b1) = dot_norm2(&c(1), &x, &y);
+        let (a8, b8) = dot_norm2(&c(8), &x, &y);
+        assert_eq!((a1, b1), (a8, b8));
+        // fused pair agrees with the blocked single-sweep dots exactly
+        assert_eq!(a1, d1);
+        assert_eq!(b1, dot(&c(3), &y, &y));
+    }
+
+    #[test]
+    fn fused_blas1_match_composed_bitwise() {
+        let mut rng = Prng::new(31);
+        let n = 10_000;
+        let c = ParConfig {
+            threads: 4,
+            seq_threshold: 0,
+        };
+        let p: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let q: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x0: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let r0: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let (alpha, beta, omega) = (0.8125f64, 0.375f64, 1.5f64);
+
+        let (mut xf, mut rf) = (x0.clone(), r0.clone());
+        let rr = axpy_sub_norm2(&c, alpha, &p, &q, &mut xf, &mut rf);
+        let (mut xc, mut rc) = (x0.clone(), r0.clone());
+        axpy(&c, alpha, &p, &mut xc);
+        axpy(&c, -alpha, &q, &mut rc);
+        assert_eq!(xf, xc);
+        assert_eq!(rf, rc);
+        assert_eq!(rr, dot(&c, &rc, &rc));
+
+        let mut of = vec![0.0f64; n];
+        add_scaled(&c, &r0, -alpha, &q, &mut of);
+        let mut oc = r0.clone();
+        axpy(&c, -alpha, &q, &mut oc);
+        assert_eq!(of, oc);
+
+        let mut pf = x0.clone();
+        update_p(&c, &r0, beta, omega, &q, &mut pf);
+        let mut pc = x0.clone();
+        reference::update_p(&r0, beta, omega, &q, &mut pc);
+        assert_eq!(pf, pc);
+
+        let mut gf = x0.clone();
+        update_p_cgs(&c, &p, beta, &q, &mut gf);
+        let mut gc = x0.clone();
+        reference::update_p_cgs(&p, beta, &q, &mut gc);
+        assert_eq!(gf, gc);
+
+        let mut sf = vec![0.0f64; n];
+        let srr = sub_scaled_norm2(&c, &p, omega, &q, &mut sf);
+        let mut sc = vec![0.0f64; n];
+        add_scaled(&c, &p, -omega, &q, &mut sc);
+        assert_eq!(sf, sc);
+        assert_eq!(srr, dot(&c, &sc, &sc));
+
+        let mut af = x0.clone();
+        axpy2(&c, alpha, &p, omega, &q, &mut af);
+        let mut ac = x0.clone();
+        axpy(&c, alpha, &p, &mut ac);
+        axpy(&c, omega, &q, &mut ac);
+        assert_eq!(af, ac);
+
+        let mut zf = vec![f64::NAN; n];
+        scal_into(&c, beta, &p, &mut zf);
+        let mut zc = p.clone();
+        scal(&c, beta, &mut zc);
+        assert_eq!(zf, zc);
+    }
+
+    #[test]
+    fn csr_nnz_balanced_matches_reference_on_skewed() {
+        // power-law-ish: one row holds half the nonzeros
+        let mut rng = Prng::new(77);
+        let n = 300;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for j in 0..n {
+            data.push(17, j as i32, rng.uniform(-1.0, 1.0));
+        }
+        for i in 0..n {
+            data.push(i as i32, i as i32, 2.0);
+            if rng.below(3) == 0 {
+                data.push(i as i32, rng.below(n) as i32, rng.uniform(-1.0, 1.0));
+            }
+        }
+        data.normalize();
+        let a = Csr::from_data(Executor::reference(), &data).unwrap();
+        let bv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = Dense::vector(Executor::reference(), &bv);
+        let mut expect = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        reference::csr_spmv(&a, &b, &mut expect);
+        for threads in [1, 2, 3, 8] {
+            let c = ParConfig {
+                threads,
+                seq_threshold: 0,
+            };
+            let mut x = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+            csr_spmv_advanced(&c, 1.0, &a, 0.0, &b, &mut x);
+            // rows are whole per thread and accumulate in storage order,
+            // so the split is bitwise-invisible
+            assert_eq!(x.as_slice(), expect.as_slice(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn fused_spmv_dot_matches_composed() {
+        let mut rng = Prng::new(101);
+        let n = 220;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            data.push(i as i32, i as i32, 3.0);
+            for _ in 0..rng.below(5) {
+                data.push(i as i32, rng.below(n) as i32, rng.uniform(-1.0, 1.0));
+            }
+        }
+        data.normalize();
+        let c = ParConfig {
+            threads: 4,
+            seq_threshold: 0,
+        };
+        let bv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let wv: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = Dense::vector(Executor::reference(), &bv);
+        let w = Dense::vector(Executor::reference(), &wv);
+
+        let csr = Csr::from_data(Executor::reference(), &data).unwrap();
+        let mut xc = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        csr_spmv_advanced(&c, 1.0, &csr, 0.0, &b, &mut xc);
+        let want_wx = dot(&c, w.as_slice(), xc.as_slice());
+        let want_xx = dot(&c, xc.as_slice(), xc.as_slice());
+
+        let mut xf = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        let (wx, xx) = csr_spmv_dot(&c, &csr, &b, &mut xf, &w);
+        assert_eq!(xf.as_slice(), xc.as_slice());
+        assert_eq!((wx, xx), (want_wx, want_xx));
+
+        let ell = Ell::from_data(Executor::reference(), &data).unwrap();
+        let mut xe = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        let (ewx, exx) = ell_spmv_dot(&c, &ell, &b, &mut xe, &w);
+        let mut xe2 = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        ell_spmv(&c, &ell, &b, &mut xe2);
+        assert_eq!(xe.as_slice(), xe2.as_slice());
+        assert_eq!(ewx, dot(&c, w.as_slice(), xe2.as_slice()));
+        assert_eq!(exx, dot(&c, xe2.as_slice(), xe2.as_slice()));
+
+        let sellp = SellP::from_data_with_slice(Executor::reference(), &data, 8).unwrap();
+        let mut xs = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        let (swx, sxx) = sellp_spmv_dot(&c, &sellp, &b, &mut xs, &w);
+        let mut xs2 = Dense::zeros(Executor::reference(), Dim2::new(n, 1));
+        sellp_spmv(&c, &sellp, &b, &mut xs2);
+        assert_eq!(xs.as_slice(), xs2.as_slice());
+        assert_eq!(swx, dot(&c, w.as_slice(), xs2.as_slice()));
+        assert_eq!(sxx, dot(&c, xs2.as_slice(), xs2.as_slice()));
     }
 }

@@ -66,6 +66,120 @@ pub fn ew_mul<T: Value>(x: &[T], y: &[T], z: &mut [T]) {
     }
 }
 
+// ---------------------------------------------------------- fused BLAS-1
+//
+// Each fused kernel collapses 2-3 full-vector sweeps of the composed
+// sequence into one pass, and performs *exactly the same elementary
+// operations in the same element order* as the composed calls, so the
+// results are bit-identical on this backend. The composed sequence each
+// one replaces is stated in its doc comment; `rust/tests/fused_kernels.rs`
+// asserts the equivalence property.
+
+/// Fused `(x·y, y·y)` in one pass over both vectors.
+///
+/// Replaces `dot(x, y)` + `dot(y, y)`.
+pub fn dot_norm2<T: Value>(x: &[T], y: &[T]) -> (T, T) {
+    let mut xy = T::zero();
+    let mut yy = T::zero();
+    for i in 0..x.len() {
+        xy += x[i] * y[i];
+        yy += y[i] * y[i];
+    }
+    (xy, yy)
+}
+
+/// Fused CG tail: `x += alpha·p; r -= alpha·q`, returning `‖r‖²`.
+///
+/// Replaces `axpy(alpha, p, x)` + `axpy(-alpha, q, r)` + `dot(r, r)`.
+pub fn axpy_sub_norm2<T: Value>(alpha: T, p: &[T], q: &[T], x: &mut [T], r: &mut [T]) -> T {
+    let mut rr = T::zero();
+    for i in 0..p.len() {
+        x[i] += alpha * p[i];
+        r[i] += -alpha * q[i];
+        rr += r[i] * r[i];
+    }
+    rr
+}
+
+/// Fused `out = z + alpha·x`.
+///
+/// Replaces `out.copy_from(z)` + `axpy(alpha, x, out)`.
+pub fn add_scaled<T: Value>(z: &[T], alpha: T, x: &[T], out: &mut [T]) {
+    for i in 0..z.len() {
+        out[i] = z[i] + alpha * x[i];
+    }
+}
+
+/// Fused BiCGSTAB direction update: `p = r + beta·(p - omega·v)`.
+///
+/// Replaces `axpy(-omega, v, p)` + `axpby(1, r, beta, p)`, including the
+/// `beta == 0` overwrite semantics of `axpby`.
+pub fn update_p<T: Value>(r: &[T], beta: T, omega: T, v: &[T], p: &mut [T]) {
+    if beta.is_zero() {
+        for i in 0..r.len() {
+            p[i] = r[i];
+        }
+    } else {
+        for i in 0..r.len() {
+            let t = p[i] + -omega * v[i];
+            p[i] = r[i] + beta * t;
+        }
+    }
+}
+
+/// Fused CGS direction update: `p = u + beta·(q + beta·p)`.
+///
+/// Replaces `axpby(1, q, beta, p)` + `axpby(1, u, beta, p)`, including
+/// the `beta == 0` overwrite semantics of `axpby`.
+pub fn update_p_cgs<T: Value>(u: &[T], beta: T, q: &[T], p: &mut [T]) {
+    if beta.is_zero() {
+        for i in 0..u.len() {
+            p[i] = u[i];
+        }
+    } else {
+        for i in 0..u.len() {
+            let t = q[i] + beta * p[i];
+            p[i] = u[i] + beta * t;
+        }
+    }
+}
+
+/// Fused BiCGSTAB residual update: `r = s - omega·t`, returning `‖r‖²`.
+///
+/// Replaces `r.copy_from(s)` + `axpy(-omega, t, r)` + `dot(r, r)`.
+pub fn sub_scaled_norm2<T: Value>(s: &[T], omega: T, t: &[T], r: &mut [T]) -> T {
+    let mut rr = T::zero();
+    for i in 0..s.len() {
+        r[i] = s[i] + -omega * t[i];
+        rr += r[i] * r[i];
+    }
+    rr
+}
+
+/// Fused double update: `x += alpha·p + omega·s` (two sequential adds,
+/// matching the composed rounding).
+///
+/// Replaces `axpy(alpha, p, x)` + `axpy(omega, s, x)`.
+pub fn axpy2<T: Value>(alpha: T, p: &[T], omega: T, s: &[T], x: &mut [T]) {
+    for i in 0..p.len() {
+        let t = x[i] + alpha * p[i];
+        x[i] = t + omega * s[i];
+    }
+}
+
+/// Fused `out = beta·x` (GMRES basis normalization).
+///
+/// Replaces `out.copy_from(x)` + `scal(beta, out)`.
+pub fn scal_into<T: Value>(beta: T, x: &[T], out: &mut [T]) {
+    if beta.is_zero() {
+        out[..x.len()].fill(T::zero());
+    } else {
+        for i in 0..x.len() {
+            out[i] = x[i] * beta;
+        }
+    }
+}
+
 // ------------------------------------------------------------------ SpMV
 
 /// CSR SpMV: x = A b (multi-rhs aware).
@@ -165,6 +279,101 @@ pub fn sellp_spmv<T: Value>(a: &SellP<T>, b: &Dense<T>, x: &mut Dense<T>) {
     }
 }
 
+// ------------------------------------------------------- fused SpMV+dot
+//
+// `x = A b` with `(w·x, x·x)` accumulated inside the row sweep: the just-
+// written entry of x is consumed for both reductions while it is still
+// in register, so the composed follow-up passes over x disappear. The
+// accumulation visits x in flattened (row-major) order — exactly the
+// order `dot` uses — so the result is bit-identical to
+// `*_spmv` + `dot(w, x)` + `dot(x, x)` on this backend.
+
+/// CSR SpMV fused with two reductions: `x = A b`, returns `(w·x, x·x)`.
+pub fn csr_spmv_dot<T: Value>(a: &Csr<T>, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> (T, T) {
+    let nrhs = b.shape().cols;
+    let row_ptrs = a.row_ptrs();
+    let col_idxs = a.col_idxs();
+    let values = a.values();
+    let ws = w.as_slice();
+    let mut wx = T::zero();
+    let mut xx = T::zero();
+    for i in 0..a.shape().rows {
+        for c in 0..nrhs {
+            let mut acc = T::zero();
+            for k in row_ptrs[i] as usize..row_ptrs[i + 1] as usize {
+                acc += values[k] * b.at(col_idxs[k] as usize, c);
+            }
+            *x.at_mut(i, c) = acc;
+            wx += ws[i * nrhs + c] * acc;
+            xx += acc * acc;
+        }
+    }
+    (wx, xx)
+}
+
+/// ELL SpMV fused with two reductions: `x = A b`, returns `(w·x, x·x)`.
+pub fn ell_spmv_dot<T: Value>(a: &Ell<T>, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> (T, T) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let k = a.stored_per_row();
+    let cols = a.col_idxs();
+    let vals = a.values();
+    let ws = w.as_slice();
+    let mut wx = T::zero();
+    let mut xx = T::zero();
+    for i in 0..n {
+        for c in 0..nrhs {
+            let mut acc = T::zero();
+            for j in 0..k {
+                let pos = j * n + i;
+                acc += vals[pos] * b.at(cols[pos] as usize, c);
+            }
+            *x.at_mut(i, c) = acc;
+            wx += ws[i * nrhs + c] * acc;
+            xx += acc * acc;
+        }
+    }
+    (wx, xx)
+}
+
+/// SELL-P SpMV fused with two reductions: `x = A b`, returns
+/// `(w·x, x·x)`. SELL-P visits rows slice-by-slice, which is still
+/// ascending row order, so the accumulation order matches `dot`.
+pub fn sellp_spmv_dot<T: Value>(
+    a: &SellP<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> (T, T) {
+    let n = a.shape().rows;
+    let nrhs = b.shape().cols;
+    let ss = a.slice_size();
+    let ws = w.as_slice();
+    let mut wx = T::zero();
+    let mut xx = T::zero();
+    for s in 0..a.num_slices() {
+        let width = a.slice_lengths[s];
+        let base = a.slice_sets[s];
+        for r in 0..ss {
+            let i = s * ss + r;
+            if i >= n {
+                break;
+            }
+            for c in 0..nrhs {
+                let mut acc = T::zero();
+                for j in 0..width {
+                    let pos = base + j * ss + r;
+                    acc += a.values[pos] * b.at(a.col_idxs[pos] as usize, c);
+                }
+                *x.at_mut(i, c) = acc;
+                wx += ws[i * nrhs + c] * acc;
+                xx += acc * acc;
+            }
+        }
+    }
+    (wx, xx)
+}
+
 /// Convert CSR row pointers to explicit row indices (COO expansion).
 pub fn row_ptrs_to_idxs(row_ptrs: &[IndexType], nnz: usize) -> Vec<IndexType> {
     let mut rows = vec![0 as IndexType; nnz];
@@ -252,5 +461,126 @@ mod tests {
         let mut x = Dense::zeros(Executor::reference(), Dim2::new(2, 2));
         csr_spmv(&a, &b, &mut x);
         assert_eq!(x.as_slice(), &[5.0, 50.0, 6.0, 60.0]);
+    }
+
+    #[test]
+    fn fused_blas1_match_composed_bitwise() {
+        let n = 37;
+        let p: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let q: Vec<f64> = (0..n).map(|i| (i as f64 * 0.73).cos()).collect();
+        let x0: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 * 1e-3).collect();
+        let r0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).tan()).collect();
+
+        // dot_norm2 == (dot, dot)
+        let (xy, yy) = dot_norm2(&p, &q);
+        assert_eq!(xy, dot(&p, &q));
+        assert_eq!(yy, dot(&q, &q));
+
+        // axpy_sub_norm2 == axpy + axpy(-a) + dot(r, r)
+        let alpha = 0.8125f64;
+        let (mut xf, mut rf) = (x0.clone(), r0.clone());
+        let rr = axpy_sub_norm2(alpha, &p, &q, &mut xf, &mut rf);
+        let (mut xc, mut rc) = (x0.clone(), r0.clone());
+        axpy(alpha, &p, &mut xc);
+        axpy(-alpha, &q, &mut rc);
+        assert_eq!(xf, xc);
+        assert_eq!(rf, rc);
+        assert_eq!(rr, dot(&rc, &rc));
+
+        // add_scaled == copy + axpy
+        let mut of = vec![0.0f64; n];
+        add_scaled(&r0, -alpha, &q, &mut of);
+        let mut oc = r0.clone();
+        axpy(-alpha, &q, &mut oc);
+        assert_eq!(of, oc);
+
+        // update_p == axpy(-omega, v, p) then axpby(1, r, beta, p)
+        let (beta, omega) = (0.375f64, 1.5f64);
+        let mut pf = x0.clone();
+        update_p(&r0, beta, omega, &q, &mut pf);
+        let mut pc = x0.clone();
+        axpy(-omega, &q, &mut pc);
+        axpby(1.0, &r0, beta, &mut pc);
+        assert_eq!(pf, pc);
+        let mut pz = x0.clone();
+        update_p(&r0, 0.0, omega, &q, &mut pz);
+        assert_eq!(pz, r0);
+
+        // update_p_cgs == scal(beta) ... via t = q + beta p; p = u + beta t
+        let mut gf = x0.clone();
+        update_p_cgs(&p, beta, &q, &mut gf);
+        let gc: Vec<f64> = (0..n)
+            .map(|i| p[i] + beta * (q[i] + beta * x0[i]))
+            .collect();
+        assert_eq!(gf, gc);
+
+        // sub_scaled_norm2 == add_scaled(-omega) + dot(r, r)
+        let mut sf = vec![0.0f64; n];
+        let srr = sub_scaled_norm2(&p, omega, &q, &mut sf);
+        let mut sc = vec![0.0f64; n];
+        add_scaled(&p, -omega, &q, &mut sc);
+        assert_eq!(sf, sc);
+        assert_eq!(srr, dot(&sc, &sc));
+
+        // axpy2 == axpy(alpha, p) + axpy(omega, s)
+        let mut af = x0.clone();
+        axpy2(alpha, &p, omega, &q, &mut af);
+        let mut ac = x0.clone();
+        axpy(alpha, &p, &mut ac);
+        axpy(omega, &q, &mut ac);
+        assert_eq!(af, ac);
+
+        // scal_into == copy + scal, incl. beta == 0 overwrite
+        let mut zf = vec![f64::NAN; n];
+        scal_into(beta, &p, &mut zf);
+        let mut zc = p.clone();
+        scal(beta, &mut zc);
+        assert_eq!(zf, zc);
+        let mut z0 = vec![f64::NAN; n];
+        scal_into(0.0, &p, &mut z0);
+        assert_eq!(z0, vec![0.0; n]);
+    }
+
+    #[test]
+    fn fused_spmv_dot_matches_composed() {
+        let mut d = MatrixData::<f64>::new(Dim2::square(5));
+        for i in 0..5i32 {
+            d.push(i, i, 4.0 + i as f64);
+            if i > 0 {
+                d.push(i, i - 1, -1.0 - 0.1 * i as f64);
+            }
+            if i < 4 {
+                d.push(i, i + 1, -0.5);
+            }
+        }
+        let exec = Executor::reference();
+        let b = Dense::vector(exec.clone(), &[1.0, -2.0, 3.0, 0.25, -0.75]);
+        let w = Dense::vector(exec.clone(), &[0.5, 1.5, -2.5, 3.5, -4.5]);
+
+        let csr = Csr::from_data(exec.clone(), &d).unwrap();
+        let mut xc = Dense::zeros(exec.clone(), Dim2::new(5, 1));
+        csr.apply(&b, &mut xc).unwrap();
+        let want_wx = dot(w.as_slice(), xc.as_slice());
+        let want_xx = dot(xc.as_slice(), xc.as_slice());
+
+        let mut xf = Dense::zeros(exec.clone(), Dim2::new(5, 1));
+        let (wx, xx) = csr_spmv_dot(&csr, &b, &mut xf, &w);
+        assert_eq!(xf.as_slice(), xc.as_slice());
+        assert_eq!(wx, want_wx);
+        assert_eq!(xx, want_xx);
+
+        let ell = Ell::from_data(exec.clone(), &d).unwrap();
+        let mut xe = Dense::zeros(exec.clone(), Dim2::new(5, 1));
+        let (ewx, exx) = ell_spmv_dot(&ell, &b, &mut xe, &w);
+        assert_eq!(xe.as_slice(), xc.as_slice());
+        assert_eq!(ewx, want_wx);
+        assert_eq!(exx, want_xx);
+
+        let sellp = SellP::from_data(exec.clone(), &d).unwrap();
+        let mut xs = Dense::zeros(exec.clone(), Dim2::new(5, 1));
+        let (swx, sxx) = sellp_spmv_dot(&sellp, &b, &mut xs, &w);
+        assert_eq!(xs.as_slice(), xc.as_slice());
+        assert_eq!(swx, want_wx);
+        assert_eq!(sxx, want_xx);
     }
 }

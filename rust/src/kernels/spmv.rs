@@ -183,6 +183,106 @@ pub fn sellp_apply_advanced<T: Value>(
     crate::kernels::blas::axpby(exec, alpha, &tmp, beta, x)
 }
 
+// ------------------------------------------------------- fused SpMV+dot
+//
+// `x = A b` returning `(w·x, x·x)` — the Krylov drivers' dominant
+// pattern (q = A p with p·q, or t = A s with t·s and t·t). Fused on the
+// host backends; the composed fallback (`*_apply` + `blas::dot_norm2`)
+// covers Xla and the `set_fused_enabled(false)` ablation baseline, with
+// guards carried by the inner calls.
+
+/// x = A b, returns `(w·x, x·x)` (CSR).
+pub fn csr_apply_dot<T: Value>(
+    exec: &Arc<Executor>,
+    a: &Csr<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> Result<(T, T)> {
+    if crate::kernels::fused_enabled() {
+        match &**exec {
+            Executor::Reference => {
+                let _obs =
+                    observe::spmv_dot_guard("csr_dot", exec.name(), x.len(), a.nnz(), T::PRECISION);
+                return Ok(reference::csr_spmv_dot(a, b, x, w));
+            }
+            Executor::Par(cfg) => {
+                let _obs =
+                    observe::spmv_dot_guard("csr_dot", exec.name(), x.len(), a.nnz(), T::PRECISION);
+                return Ok(par::csr_spmv_dot(cfg, a, b, x, w));
+            }
+            Executor::Xla(_) => {}
+        }
+    }
+    csr_apply(exec, a, b, x)?;
+    crate::kernels::blas::dot_norm2(exec, w, x)
+}
+
+/// x = A b, returns `(w·x, x·x)` (ELL).
+pub fn ell_apply_dot<T: Value>(
+    exec: &Arc<Executor>,
+    a: &Ell<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> Result<(T, T)> {
+    if crate::kernels::fused_enabled() {
+        match &**exec {
+            Executor::Reference => {
+                let _obs =
+                    observe::spmv_dot_guard("ell_dot", exec.name(), x.len(), a.nnz(), T::PRECISION);
+                return Ok(reference::ell_spmv_dot(a, b, x, w));
+            }
+            Executor::Par(cfg) => {
+                let _obs =
+                    observe::spmv_dot_guard("ell_dot", exec.name(), x.len(), a.nnz(), T::PRECISION);
+                return Ok(par::ell_spmv_dot(cfg, a, b, x, w));
+            }
+            Executor::Xla(_) => {}
+        }
+    }
+    ell_apply(exec, a, b, x)?;
+    crate::kernels::blas::dot_norm2(exec, w, x)
+}
+
+/// x = A b, returns `(w·x, x·x)` (SELL-P; `NotSupported` on xla like
+/// the plain apply).
+pub fn sellp_apply_dot<T: Value>(
+    exec: &Arc<Executor>,
+    a: &SellP<T>,
+    b: &Dense<T>,
+    x: &mut Dense<T>,
+    w: &Dense<T>,
+) -> Result<(T, T)> {
+    if crate::kernels::fused_enabled() {
+        match &**exec {
+            Executor::Reference => {
+                let _obs = observe::spmv_dot_guard(
+                    "sellp_dot",
+                    exec.name(),
+                    x.len(),
+                    a.nnz(),
+                    T::PRECISION,
+                );
+                return Ok(reference::sellp_spmv_dot(a, b, x, w));
+            }
+            Executor::Par(cfg) => {
+                let _obs = observe::spmv_dot_guard(
+                    "sellp_dot",
+                    exec.name(),
+                    x.len(),
+                    a.nnz(),
+                    T::PRECISION,
+                );
+                return Ok(par::sellp_spmv_dot(cfg, a, b, x, w));
+            }
+            Executor::Xla(_) => {}
+        }
+    }
+    sellp_apply(exec, a, b, x)?;
+    crate::kernels::blas::dot_norm2(exec, w, x)
+}
+
 /// x = A b (Hybrid).
 pub fn hybrid_apply<T: Value>(
     exec: &Arc<Executor>,

@@ -235,6 +235,11 @@ impl<T: Value> LinOp<T> for Csr<T> {
         crate::kernels::spmv::csr_apply_advanced(&self.exec, alpha, self, beta, b, x)
     }
 
+    fn apply_dot(&self, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> Result<(T, T)> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::csr_apply_dot(&self.exec, self, b, x, w)
+    }
+
     fn op_name(&self) -> &'static str {
         "csr"
     }

@@ -106,6 +106,12 @@ impl<T: Value> Dense<T> {
         self.values.fill(value);
     }
 
+    /// Consume the object, returning the row-major buffer (used by the
+    /// solver workspace to recycle allocations across solves).
+    pub fn into_vec(self) -> Vec<T> {
+        self.values
+    }
+
     /// Copy values from another dense of identical shape.
     pub fn copy_from(&mut self, other: &Dense<T>) -> Result<()> {
         if self.dim != other.dim {

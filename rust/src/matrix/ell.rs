@@ -158,6 +158,11 @@ impl<T: Value> LinOp<T> for Ell<T> {
         crate::kernels::spmv::ell_apply_advanced(&self.exec, alpha, self, beta, b, x)
     }
 
+    fn apply_dot(&self, b: &Dense<T>, x: &mut Dense<T>, w: &Dense<T>) -> Result<(T, T)> {
+        self.check_conformant(b, x)?;
+        crate::kernels::spmv::ell_apply_dot(&self.exec, self, b, x, w)
+    }
+
     fn op_name(&self) -> &'static str {
         "ell"
     }

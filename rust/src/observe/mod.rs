@@ -51,7 +51,7 @@ use std::time::Instant;
 
 use crate::core::types::Precision;
 use crate::matgen::MatrixStats;
-use crate::perfmodel::traffic::{spmv_flops, spmv_useful_bytes, SpmvKernelKind};
+use crate::perfmodel::traffic::{spmv_flops, spmv_useful_bytes, FusedBlasKind, SpmvKernelKind};
 
 /// Fast-path switch: `true` iff an enabled logger is installed.
 static ENABLED: AtomicBool = AtomicBool::new(false);
@@ -249,4 +249,63 @@ pub fn blas_guard(
         return None;
     }
     KernelGuard::new(KernelClass::Blas, name, exec, flops, bytes)
+}
+
+/// Guard for a fused BLAS-1 kernel: the flop/byte model comes from
+/// `perfmodel::traffic::FusedBlasKind`, so the roofline profile credits
+/// the *fused* (reduced) byte count, not the composed sequence's.
+#[inline]
+pub fn fused_blas_guard(
+    kind: FusedBlasKind,
+    exec: &'static str,
+    n: usize,
+    precision: Precision,
+) -> Option<KernelGuard> {
+    if !enabled() {
+        return None;
+    }
+    KernelGuard::new(
+        KernelClass::Blas,
+        kind.name(),
+        exec,
+        kind.flops(n),
+        kind.useful_bytes(n, precision),
+    )
+}
+
+/// Guard for a fused SpMV+dot kernel (`x = A b` with `(w·x, x·x)` in
+/// the same logical pass): the SpMV footprint plus one extra read of w,
+/// with x read once instead of the composed path's twice.
+#[inline]
+pub fn spmv_dot_guard(
+    name: &'static str,
+    exec: &'static str,
+    rows: usize,
+    nnz: usize,
+    precision: Precision,
+) -> Option<KernelGuard> {
+    if !enabled() {
+        return None;
+    }
+    let kind = match name {
+        "csr_dot" => SpmvKernelKind::Csr,
+        "ell_dot" => SpmvKernelKind::Ell,
+        _ => SpmvKernelKind::SellP,
+    };
+    let stats = MatrixStats {
+        n: rows,
+        nnz,
+        avg_row: nnz as f64 / rows.max(1) as f64,
+        max_row: 0,
+        row_cv: 0.0,
+        bandwidth_frac: 0.0,
+    };
+    let elem = precision.bytes() as f64;
+    KernelGuard::new(
+        KernelClass::Spmv,
+        name,
+        exec,
+        spmv_flops(&stats) + 4.0 * rows as f64,
+        spmv_useful_bytes(kind, &stats, precision) + rows as f64 * elem,
+    )
 }

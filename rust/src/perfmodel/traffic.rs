@@ -49,6 +49,100 @@ impl SpmvKernelKind {
     }
 }
 
+/// Which fused BLAS-1 kernel (see `kernels::reference`). Every fused
+/// kernel replaces a composed sequence of simple BLAS-1 sweeps; the
+/// model tracks both footprints so the roofline profile credits the
+/// saved traffic. "Streams" count full-vector reads + writes per
+/// element (the §5-style useful-bytes accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FusedBlasKind {
+    /// `(x·y, y·y)` in one sweep (replaces `dot` + `dot`).
+    DotNorm2,
+    /// `x += αp; r -= αq; r·r` (replaces `axpy` + `axpy` + `dot`).
+    AxpySubNorm2,
+    /// `out = z + αx` (replaces `copy` + `axpy`).
+    AddScaled,
+    /// `p = r + β(p − ωv)` (replaces `axpy` + `axpby`).
+    UpdateP,
+    /// `p = u + β(q + βp)` (replaces `axpy`-style pair, CGS variant).
+    UpdatePCgs,
+    /// `r = s − ωt; r·r` (replaces `copy` + `axpy` + `dot`).
+    SubScaledNorm2,
+    /// `x += αp; x += ωs` stacked (replaces `axpy` + `axpy`).
+    Axpy2,
+    /// `out = βx` (replaces `copy` + `scal`).
+    ScalInto,
+}
+
+impl FusedBlasKind {
+    /// Display name (matches the kernel function name).
+    pub fn name(self) -> &'static str {
+        match self {
+            FusedBlasKind::DotNorm2 => "dot_norm2",
+            FusedBlasKind::AxpySubNorm2 => "axpy_sub_norm2",
+            FusedBlasKind::AddScaled => "add_scaled",
+            FusedBlasKind::UpdateP => "update_p",
+            FusedBlasKind::UpdatePCgs => "update_p_cgs",
+            FusedBlasKind::SubScaledNorm2 => "sub_scaled_norm2",
+            FusedBlasKind::Axpy2 => "axpy2",
+            FusedBlasKind::ScalInto => "scal_into",
+        }
+    }
+
+    /// Useful FLOPs per element.
+    pub fn flops_per_elem(self) -> f64 {
+        match self {
+            FusedBlasKind::DotNorm2 => 4.0,
+            FusedBlasKind::AxpySubNorm2 => 6.0,
+            FusedBlasKind::AddScaled => 2.0,
+            FusedBlasKind::UpdateP => 4.0,
+            FusedBlasKind::UpdatePCgs => 4.0,
+            FusedBlasKind::SubScaledNorm2 => 4.0,
+            FusedBlasKind::Axpy2 => 4.0,
+            FusedBlasKind::ScalInto => 1.0,
+        }
+    }
+
+    /// Full-vector streams (reads + writes) the fused kernel moves.
+    pub fn streams(self) -> f64 {
+        match self {
+            FusedBlasKind::DotNorm2 => 2.0,
+            FusedBlasKind::AxpySubNorm2 => 6.0,
+            FusedBlasKind::AddScaled => 3.0,
+            FusedBlasKind::UpdateP => 4.0,
+            FusedBlasKind::UpdatePCgs => 4.0,
+            FusedBlasKind::SubScaledNorm2 => 3.0,
+            FusedBlasKind::Axpy2 => 4.0,
+            FusedBlasKind::ScalInto => 2.0,
+        }
+    }
+
+    /// Streams the composed (unfused) sequence would move — the saving
+    /// credited by fusion is `composed_streams - streams`.
+    pub fn composed_streams(self) -> f64 {
+        match self {
+            FusedBlasKind::DotNorm2 => 3.0,
+            FusedBlasKind::AxpySubNorm2 => 7.0,
+            FusedBlasKind::AddScaled => 5.0,
+            FusedBlasKind::UpdateP => 6.0,
+            FusedBlasKind::UpdatePCgs => 6.0,
+            FusedBlasKind::SubScaledNorm2 => 6.0,
+            FusedBlasKind::Axpy2 => 6.0,
+            FusedBlasKind::ScalInto => 4.0,
+        }
+    }
+
+    /// Useful bytes of one fused call over length-`n` vectors.
+    pub fn useful_bytes(self, n: usize, p: Precision) -> f64 {
+        self.streams() * n as f64 * p.bytes() as f64
+    }
+
+    /// Useful FLOPs of one fused call over length-`n` vectors.
+    pub fn flops(self, n: usize) -> f64 {
+        self.flops_per_elem() * n as f64
+    }
+}
+
 /// Useful FLOPs of one SpMV (the paper counts 2 per stored nonzero).
 pub fn spmv_flops(stats: &MatrixStats) -> f64 {
     2.0 * stats.nnz as f64
@@ -190,5 +284,44 @@ mod tests {
     fn flops_are_2nnz() {
         let s = stats(10, 55, 7, 0.0, 0.0);
         assert_eq!(spmv_flops(&s), 110.0);
+    }
+
+    #[test]
+    fn fused_kernels_always_save_streams() {
+        use FusedBlasKind::*;
+        for k in [
+            DotNorm2,
+            AxpySubNorm2,
+            AddScaled,
+            UpdateP,
+            UpdatePCgs,
+            SubScaledNorm2,
+            Axpy2,
+            ScalInto,
+        ] {
+            assert!(
+                k.streams() < k.composed_streams(),
+                "{} must cut traffic",
+                k.name()
+            );
+            assert!(k.flops_per_elem() > 0.0);
+            // bytes scale with n and precision
+            assert_eq!(
+                k.useful_bytes(100, Precision::Double),
+                k.streams() * 800.0
+            );
+            assert_eq!(
+                k.useful_bytes(100, Precision::Single),
+                k.streams() * 400.0
+            );
+            assert_eq!(k.flops(50), 50.0 * k.flops_per_elem());
+        }
+        // one CG iteration's BLAS-1 sweeps: fused cuts 16 streams to 11
+        let fused: f64 = [AxpySubNorm2, DotNorm2].iter().map(|k| k.streams()).sum();
+        let composed: f64 = [AxpySubNorm2, DotNorm2]
+            .iter()
+            .map(|k| k.composed_streams())
+            .sum();
+        assert!(composed - fused >= 2.0);
     }
 }

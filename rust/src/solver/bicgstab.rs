@@ -6,7 +6,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// BiCGSTAB solver.
@@ -35,13 +35,13 @@ impl<T: Value> Solver<T> for BiCgStab {
         let crit = &crit;
         let mut det = self.config.breakdown.detector();
 
-        let mut r = b.clone();
+        let mut r = ws::take_copy(b);
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
-        let rhat = r.clone();
-        let mut p = Dense::zeros(exec.clone(), dim);
-        let mut v = Dense::zeros(exec.clone(), dim);
-        let mut s = Dense::zeros(exec.clone(), dim);
-        let mut t = Dense::zeros(exec.clone(), dim);
+        let rhat = ws::take_copy(&r);
+        let mut p = ws::take_zeroed(&exec, dim);
+        let mut v = ws::take_zeroed(&exec, dim);
+        let mut s = ws::take_zeroed(&exec, dim);
+        let mut t = ws::take_zeroed(&exec, dim);
         let mut rho = T::one();
         let mut alpha = T::one();
         let mut omega = T::one();
@@ -75,36 +75,28 @@ impl<T: Value> Solver<T> for BiCgStab {
             }
             let beta = (rho_new / rho) * (alpha / omega);
             rho = rho_new;
-            // p = r + beta * (p - omega * v)
-            blas::axpy(&exec, -omega, &v, &mut p)?;
-            blas::axpby(&exec, T::one(), &r, beta, &mut p)?;
-            a.apply(&p, &mut v)?;
-            let rv = blas::dot(&exec, &rhat, &v)?;
+            // fused: p = r + beta * (p - omega * v), one sweep
+            blas::update_p(&exec, &r, beta, omega, &v, &mut p)?;
+            // fused SpMV: v = A p and rhat·v in one pass
+            let (rv, _) = a.apply_dot(&p, &mut v, &rhat)?;
             if let Some(bd) = det.scalar("rhat·v", rv.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
             alpha = rho / rv;
-            // s = r - alpha v
-            s.copy_from(&r)?;
-            blas::axpy(&exec, -alpha, &v, &mut s)?;
-            a.apply(&s, &mut t)?;
-            let tt = blas::dot(&exec, &t, &t)?;
-            omega = if tt.is_zero() {
-                T::zero()
-            } else {
-                blas::dot(&exec, &t, &s)? / tt
-            };
+            // fused: s = r - alpha v
+            blas::add_scaled(&exec, &r, -alpha, &v, &mut s)?;
+            // fused SpMV: t = A s with s·t and t·t in one pass
+            let (ts, tt) = a.apply_dot(&s, &mut t, &s)?;
+            omega = if tt.is_zero() { T::zero() } else { ts / tt };
             // omega -> 0 stalls stabilization and divides beta next iter
             if let Some(bd) = det.scalar("omega", omega.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
-            // x += alpha p + omega s
-            blas::axpy(&exec, alpha, &p, x)?;
-            blas::axpy(&exec, omega, &s, x)?;
-            // r = s - omega t
-            r.copy_from(&s)?;
-            blas::axpy(&exec, -omega, &t, &mut r)?;
-            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            // fused: x += alpha p + omega s
+            blas::axpy2(&exec, alpha, &p, omega, &s, x)?;
+            // fused: r = s - omega t; rr = ||r||²
+            let rr = blas::sub_scaled_norm2(&exec, &s, omega, &t, &mut r)?;
+            resnorm = rr.sqrt().as_f64();
             iters += 1;
             crate::observe::solver_iteration("bicgstab", iters, resnorm);
             if self.config.record_history {
@@ -126,7 +118,10 @@ impl<T: Value> Solver<T> for BiCgStab {
     }
 
     fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
-        (2 * (nnz * (elem + 8) + 2 * n * elem) + 6 * 3 * n * elem + 5 * 2 * n * elem) as u64
+        // Fused: 2 spmv_dot (+1n each) + rhat·r dot (2n) + update_p (4n)
+        // + add_scaled (3n) + axpy2 (4n) + sub_scaled_norm2 (3n);
+        // was 28n composed.
+        (2 * (nnz * (elem + 8) + 2 * n * elem) + (2 + 2 + 4 + 3 + 4 + 3) * n * elem) as u64
     }
 }
 

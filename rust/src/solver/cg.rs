@@ -10,7 +10,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// CG solver with optional preconditioner.
@@ -49,20 +49,32 @@ impl<T: Value> Solver<T> for Cg<T> {
         let crit = &crit;
         let mut det = self.config.breakdown.detector();
 
-        // r = b - A x
-        let mut r = b.clone();
+        // r = b - A x (workspace-pooled: repeated solves reuse buffers)
+        let mut r = ws::take_copy(b);
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
-        let mut z = Dense::zeros(exec.clone(), dim);
-        match &self.precond {
-            Some(m) => m.apply(&r, &mut z)?,
-            None => z.copy_from(&r)?,
-        }
-        let mut p = z.clone();
-        let mut q = Dense::zeros(exec.clone(), dim);
-        let mut rz = blas::dot(&exec, &r, &z)?;
+        // z is only materialized when a preconditioner exists; the
+        // unpreconditioned path aliases it to r (the textbook z = r).
+        let mut z: Option<ws::WsDense<T>> = match &self.precond {
+            Some(m) => {
+                let mut z = ws::take_zeroed(&exec, dim);
+                m.apply(&r, &mut z)?;
+                Some(z)
+            }
+            None => None,
+        };
+        let mut p = match &z {
+            Some(z) => ws::take_copy(z),
+            None => ws::take_copy(&r),
+        };
+        let mut q = ws::take_zeroed(&exec, dim);
+        // fused sweep: rz = z·r and ||r||² together
+        let (mut rz, rr0) = match &z {
+            Some(z) => blas::dot_norm2(&exec, z, &r)?,
+            None => blas::dot_norm2(&exec, &r, &r)?,
+        };
 
         let bnorm = blas::norm2(&exec, b)?.as_f64();
-        let mut resnorm = blas::norm2(&exec, &r)?.as_f64();
+        let mut resnorm = rr0.sqrt().as_f64();
         let mut history = Vec::new();
         if self.config.record_history {
             history.push(resnorm);
@@ -82,27 +94,34 @@ impl<T: Value> Solver<T> for Cg<T> {
                     })
                 }
             }
-            a.apply(&p, &mut q)?;
-            let pq = blas::dot(&exec, &p, &q)?;
+            // fused SpMV: q = A p and p·q in one pass
+            let (pq, _) = a.apply_dot(&p, &mut q, &p)?;
             if let Some(bd) = det.scalar("p·Ap", pq.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
             let alpha = rz / pq;
-            blas::axpy(&exec, alpha, &p, x)?;
-            blas::axpy(&exec, -alpha, &q, &mut r)?;
-            match &self.precond {
-                Some(m) => m.apply(&r, &mut z)?,
-                None => z.copy_from(&r)?,
-            }
-            let rz_new = blas::dot(&exec, &r, &z)?;
+            // fused: x += alpha p; r -= alpha q; rr = ||r||²
+            let rr = blas::axpy_sub_norm2(&exec, alpha, &p, &q, x, &mut r)?;
+            let rz_new = if let (Some(m), Some(z)) = (&self.precond, &mut z) {
+                m.apply(&r, z)?;
+                blas::dot(&exec, &r, &**z)?
+            } else {
+                rr
+            };
             if let Some(bd) = det.scalar("rho", rz_new.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
             let beta = rz_new / rz;
             rz = rz_new;
             // p = z + beta p
-            blas::axpby(&exec, T::one(), &z, beta, &mut p)?;
-            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            {
+                let zref: &Dense<T> = match &z {
+                    Some(z) => z,
+                    None => &r,
+                };
+                blas::axpby(&exec, T::one(), zref, beta, &mut p)?;
+            }
+            resnorm = rr.sqrt().as_f64();
             iters += 1;
             crate::observe::solver_iteration("cg", iters, resnorm);
             if self.config.record_history {
@@ -124,8 +143,10 @@ impl<T: Value> Solver<T> for Cg<T> {
     }
 
     fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
-        // COO SpMV footprint + BLAS-1 traffic (3 axpy: r3n, 3 dot: r2n)
-        ((nnz * (elem + 8) + 2 * n * elem) + 3 * 3 * n * elem + 3 * 2 * n * elem) as u64
+        // Fused driver: SpMV+dot (1 extra read of p) + axpy_sub_norm2
+        // (6 streams: p,q read; x,r read+write) + axpby p-update (3
+        // streams). Was 15n before fusion — see DESIGN.md.
+        ((nnz * (elem + 8) + 2 * n * elem) + (1 + 6 + 3) * n * elem) as u64
     }
 }
 

@@ -6,7 +6,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// CGS solver.
@@ -35,15 +35,15 @@ impl<T: Value> Solver<T> for Cgs {
         let crit = &crit;
         let mut det = self.config.breakdown.detector();
 
-        let mut r = b.clone();
+        let mut r = ws::take_copy(b);
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
-        let rhat = r.clone();
-        let mut p = Dense::zeros(exec.clone(), dim);
-        let mut q = Dense::zeros(exec.clone(), dim);
-        let mut u = Dense::zeros(exec.clone(), dim);
-        let mut vhat = Dense::zeros(exec.clone(), dim);
-        let mut uq = Dense::zeros(exec.clone(), dim);
-        let mut auq = Dense::zeros(exec.clone(), dim);
+        let rhat = ws::take_copy(&r);
+        let mut p = ws::take_zeroed(&exec, dim);
+        let mut q = ws::take_zeroed(&exec, dim);
+        let mut u = ws::take_zeroed(&exec, dim);
+        let mut vhat = ws::take_zeroed(&exec, dim);
+        let mut uq = ws::take_zeroed(&exec, dim);
+        let mut auq = ws::take_zeroed(&exec, dim);
         let mut rho = T::one();
 
         let bnorm = blas::norm2(&exec, b)?.as_f64();
@@ -74,29 +74,24 @@ impl<T: Value> Solver<T> for Cgs {
             }
             let beta = rho_new / rho;
             rho = rho_new;
-            // u = r + beta q
-            u.copy_from(&r)?;
-            blas::axpy(&exec, beta, &q, &mut u)?;
-            // p = u + beta (q + beta p)
-            blas::axpby(&exec, T::one(), &q, beta, &mut p)?;
-            blas::axpby(&exec, T::one(), &u, beta, &mut p)?;
-            a.apply(&p, &mut vhat)?;
-            let sigma = blas::dot(&exec, &rhat, &vhat)?;
+            // fused: u = r + beta q
+            blas::add_scaled(&exec, &r, beta, &q, &mut u)?;
+            // fused: p = u + beta (q + beta p), one sweep
+            blas::update_p_cgs(&exec, &u, beta, &q, &mut p)?;
+            // fused SpMV: vhat = A p and rhat·vhat in one pass
+            let (sigma, _) = a.apply_dot(&p, &mut vhat, &rhat)?;
             if let Some(bd) = det.scalar("sigma", sigma.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
             let alpha = rho / sigma;
-            // q = u - alpha vhat
-            q.copy_from(&u)?;
-            blas::axpy(&exec, -alpha, &vhat, &mut q)?;
-            // uq = u + q
-            uq.copy_from(&u)?;
-            blas::axpy(&exec, T::one(), &q, &mut uq)?;
-            // x += alpha uq ; r -= alpha A uq
-            blas::axpy(&exec, alpha, &uq, x)?;
+            // fused: q = u - alpha vhat
+            blas::add_scaled(&exec, &u, -alpha, &vhat, &mut q)?;
+            // fused: uq = u + q
+            blas::add_scaled(&exec, &u, T::one(), &q, &mut uq)?;
+            // x += alpha uq ; r -= alpha A uq ; rr = ||r||² (one sweep)
             a.apply(&uq, &mut auq)?;
-            blas::axpy(&exec, -alpha, &auq, &mut r)?;
-            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            let rr = blas::axpy_sub_norm2(&exec, alpha, &uq, &auq, x, &mut r)?;
+            resnorm = rr.sqrt().as_f64();
             iters += 1;
             crate::observe::solver_iteration("cgs", iters, resnorm);
             if self.config.record_history {
@@ -118,7 +113,9 @@ impl<T: Value> Solver<T> for Cgs {
     }
 
     fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
-        (2 * (nnz * (elem + 8) + 2 * n * elem) + 7 * 3 * n * elem + 3 * 2 * n * elem) as u64
+        // Fused: spmv_dot (+1n) + rhat·r dot (2n) + 3 add_scaled (9n)
+        // + update_p_cgs (4n) + axpy_sub_norm2 (6n); was 27n composed.
+        (2 * (nnz * (elem + 8) + 2 * n * elem) + (1 + 2 + 9 + 4 + 6) * n * elem) as u64
     }
 }
 

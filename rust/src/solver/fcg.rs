@@ -10,7 +10,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// Flexible CG solver.
@@ -49,20 +49,31 @@ impl<T: Value> Solver<T> for Fcg<T> {
         let crit = &crit;
         let mut det = self.config.breakdown.detector();
 
-        let mut r = b.clone();
+        let mut r = ws::take_copy(b);
         a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
-        let mut z = Dense::zeros(exec.clone(), dim);
-        match &self.precond {
-            Some(m) => m.apply(&r, &mut z)?,
-            None => z.copy_from(&r)?,
-        }
-        let mut p = z.clone();
-        let mut q = Dense::zeros(exec.clone(), dim);
-        let mut r_old = r.clone();
-        let mut rz = blas::dot(&exec, &r, &z)?;
+        // z only materialized when preconditioned (else z aliases r)
+        let mut z: Option<ws::WsDense<T>> = match &self.precond {
+            Some(m) => {
+                let mut z = ws::take_zeroed(&exec, dim);
+                m.apply(&r, &mut z)?;
+                Some(z)
+            }
+            None => None,
+        };
+        let mut p = match &z {
+            Some(z) => ws::take_copy(z),
+            None => ws::take_copy(&r),
+        };
+        let mut q = ws::take_zeroed(&exec, dim);
+        let mut r_old = ws::take_copy(&r);
+        // fused sweep: rz = z·r and ||r||² together
+        let (mut rz, rr0) = match &z {
+            Some(z) => blas::dot_norm2(&exec, z, &r)?,
+            None => blas::dot_norm2(&exec, &r, &r)?,
+        };
 
         let bnorm = blas::norm2(&exec, b)?.as_f64();
-        let mut resnorm = blas::norm2(&exec, &r)?.as_f64();
+        let mut resnorm = rr0.sqrt().as_f64();
         let mut history = Vec::new();
         if self.config.record_history {
             history.push(resnorm);
@@ -82,29 +93,35 @@ impl<T: Value> Solver<T> for Fcg<T> {
                     })
                 }
             }
-            a.apply(&p, &mut q)?;
-            let pq = blas::dot(&exec, &p, &q)?;
+            // fused SpMV: q = A p and p·q in one pass
+            let (pq, _) = a.apply_dot(&p, &mut q, &p)?;
             if let Some(bd) = det.scalar("p·Ap", pq.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
             let alpha = rz / pq;
-            blas::axpy(&exec, alpha, &p, x)?;
             r_old.copy_from(&r)?;
-            blas::axpy(&exec, -alpha, &q, &mut r)?;
-            match &self.precond {
-                Some(m) => m.apply(&r, &mut z)?,
-                None => z.copy_from(&r)?,
-            }
+            // fused: x += alpha p; r -= alpha q; rr = ||r||²
+            let rr = blas::axpy_sub_norm2(&exec, alpha, &p, &q, x, &mut r)?;
             // Polak-Ribière: beta = <r - r_old, z> / rz_old
-            let rz_new = blas::dot(&exec, &r, &z)?;
+            let (rz_new, r_old_z) = if let (Some(m), Some(z)) = (&self.precond, &mut z) {
+                m.apply(&r, z)?;
+                (blas::dot(&exec, &r, &**z)?, blas::dot(&exec, &r_old, &**z)?)
+            } else {
+                (rr, blas::dot(&exec, &r_old, &r)?)
+            };
             if let Some(bd) = det.scalar("rho", rz_new.as_f64()) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
-            let r_old_z = blas::dot(&exec, &r_old, &z)?;
             let beta = (rz_new - r_old_z) / rz;
             rz = rz_new;
-            blas::axpby(&exec, T::one(), &z, beta, &mut p)?;
-            resnorm = blas::norm2(&exec, &r)?.as_f64();
+            {
+                let zref: &Dense<T> = match &z {
+                    Some(z) => z,
+                    None => &r,
+                };
+                blas::axpby(&exec, T::one(), zref, beta, &mut p)?;
+            }
+            resnorm = rr.sqrt().as_f64();
             iters += 1;
             crate::observe::solver_iteration("fcg", iters, resnorm);
             if self.config.record_history {
@@ -126,7 +143,9 @@ impl<T: Value> Solver<T> for Fcg<T> {
     }
 
     fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
-        ((nnz * (elem + 8) + 2 * n * elem) + 4 * 3 * n * elem + 4 * 2 * n * elem) as u64
+        // Fused: spmv_dot (+1n) + r_old copy (2n) + axpy_sub_norm2 (6n)
+        // + r_old·z dot (2n) + axpby (3n); was 20n composed.
+        ((nnz * (elem + 8) + 2 * n * elem) + (1 + 2 + 6 + 2 + 3) * n * elem) as u64
     }
 }
 

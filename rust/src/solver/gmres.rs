@@ -12,7 +12,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// GMRES solver with restart length `m`.
@@ -58,14 +58,15 @@ impl<T: Value> Solver<T> for Gmres {
         let mut total_iters = 0usize;
         let mut resnorm;
 
-        // Krylov basis kept as individual vectors (host memory).
-        let mut basis: Vec<Dense<T>> = Vec::with_capacity(m + 1);
+        // Krylov basis kept as individual pooled vectors (host memory);
+        // clearing it per restart returns every buffer to the workspace.
+        let mut basis: Vec<ws::WsDense<T>> = Vec::with_capacity(m + 1);
         // Hessenberg in column-major: h[j] has j+2 entries.
-        let mut w = Dense::zeros(exec.clone(), dim);
+        let mut w = ws::take_zeroed(&exec, dim);
 
         'outer: loop {
             // r = b - A x
-            let mut r = b.clone();
+            let mut r = ws::take_copy(b);
             a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
             resnorm = blas::norm2(&exec, &r)?.as_f64();
             if self.config.record_history && history.is_empty() {
@@ -86,8 +87,9 @@ impl<T: Value> Solver<T> for Gmres {
 
             let beta = T::from_f64(resnorm);
             basis.clear();
-            let mut v0 = r.clone();
-            blas::scal(&exec, T::one() / beta, &mut v0)?;
+            // fused: v0 = r / beta without a copy-then-scale pass
+            let mut v0 = ws::take_zeroed(&exec, dim);
+            blas::scal_into(&exec, T::one() / beta, &r, &mut v0)?;
             basis.push(v0);
 
             // Givens rotation state + rhs of the LSQ problem
@@ -173,9 +175,9 @@ impl<T: Value> Solver<T> for Gmres {
                         history,
                     });
                 }
-                // next basis vector
-                let mut vnext = w.clone();
-                blas::scal(&exec, T::one() / wnorm, &mut vnext)?;
+                // next basis vector: vnext = w / wnorm, one fused sweep
+                let mut vnext = ws::take_zeroed(&exec, dim);
+                blas::scal_into(&exec, T::one() / wnorm, &w, &mut vnext)?;
                 basis.push(vnext);
             }
             // restart: fold the Krylov correction into x, continue
@@ -206,7 +208,7 @@ impl<T: Value> Solver<T> for Gmres {
 fn update_solution<T: Value>(
     exec: &std::sync::Arc<crate::core::executor::Executor>,
     x: &mut Dense<T>,
-    basis: &[Dense<T>],
+    basis: &[ws::WsDense<T>],
     h_cols: &[Vec<T>],
     g: &[T],
     k: usize,

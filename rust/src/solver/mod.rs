@@ -20,6 +20,7 @@ pub mod fused;
 mod gmres;
 mod ir;
 mod richardson;
+pub mod workspace;
 
 pub use bicgstab::BiCgStab;
 pub use builder::SolverBuilder;

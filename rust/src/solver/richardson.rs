@@ -9,7 +9,7 @@ use crate::core::linop::LinOp;
 use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
-use crate::solver::{diverged, SolveResult, Solver, SolverConfig};
+use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
 use crate::stop::StopStatus;
 
 /// Richardson solver with relaxation factor `omega`.
@@ -50,8 +50,12 @@ impl<T: Value> Solver<T> for Richardson<T> {
         let crit = &crit;
         let mut det = self.config.breakdown.detector();
 
-        let mut r = Dense::zeros(exec.clone(), dim);
-        let mut z = Dense::zeros(exec.clone(), dim);
+        let mut r = ws::take_zeroed(&exec, dim);
+        // z only materialized when preconditioned
+        let mut z: Option<ws::WsDense<T>> = match &self.precond {
+            Some(_) => Some(ws::take_zeroed(&exec, dim)),
+            None => None,
+        };
         let bnorm = blas::norm2(&exec, b)?.as_f64();
         let mut history = Vec::new();
         let mut iters = 0;
@@ -80,12 +84,12 @@ impl<T: Value> Solver<T> for Richardson<T> {
             if let Some(bd) = det.residual(resnorm) {
                 return Ok(diverged(iters, resnorm, history, bd));
             }
-            match &self.precond {
-                Some(m) => {
-                    m.apply(&r, &mut z)?;
-                    blas::axpy(&exec, self.omega, &z, x)?;
+            match (&self.precond, &mut z) {
+                (Some(m), Some(z)) => {
+                    m.apply(&r, z)?;
+                    blas::axpy(&exec, self.omega, &**z, x)?;
                 }
-                None => blas::axpy(&exec, self.omega, &r, x)?,
+                _ => blas::axpy(&exec, self.omega, &r, x)?,
             }
             iters += 1;
             crate::observe::solver_iteration("richardson", iters, resnorm);

@@ -1,0 +1,203 @@
+//! Solver workspace: a thread-local arena for the Dense temporaries
+//! (r, z, p, q, Krylov basis) every Krylov driver allocates per solve.
+//!
+//! Buffers are pooled keyed by `(element type, element count)`; a
+//! driver *takes* a vector at iteration-zero and the [`WsDense`] guard
+//! *returns* the underlying allocation on drop. After the first solve
+//! of a given shape warms the pool, repeated `SolverBuilder` solves
+//! perform zero Dense allocations in the hot loop — the acceptance
+//! criterion tracked by `stats()` (hits, misses) and asserted by the
+//! repeated-solve benchmark.
+//!
+//! The pool is thread-local because operators are not `Send` (see
+//! `core::linop`): a solve runs on one thread, so no locking is needed
+//! and buffers never migrate.
+
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+use crate::core::dim::Dim2;
+use crate::core::executor::Executor;
+use crate::core::types::Value;
+use crate::matrix::dense::Dense;
+
+struct Pool {
+    buffers: HashMap<(TypeId, usize), Vec<Box<dyn Any>>>,
+    hits: u64,
+    misses: u64,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool {
+        buffers: HashMap::new(),
+        hits: 0,
+        misses: 0,
+    });
+}
+
+fn take_buffer<T: Value>(count: usize) -> Option<Vec<T>> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let buf = p
+            .buffers
+            .get_mut(&(TypeId::of::<T>(), count))
+            .and_then(|v| v.pop());
+        match buf {
+            Some(b) => {
+                p.hits += 1;
+                Some(*b.downcast::<Vec<T>>().expect("workspace key mismatch"))
+            }
+            None => {
+                p.misses += 1;
+                None
+            }
+        }
+    })
+}
+
+fn put_buffer<T: Value>(buf: Vec<T>) {
+    POOL.with(|p| {
+        p.borrow_mut()
+            .buffers
+            .entry((TypeId::of::<T>(), buf.len()))
+            .or_default()
+            .push(Box::new(buf));
+    });
+}
+
+/// A pooled Dense temporary. Derefs to [`Dense`]; the underlying buffer
+/// returns to the thread-local pool on drop.
+pub struct WsDense<T: Value>(Option<Dense<T>>);
+
+impl<T: Value> Deref for WsDense<T> {
+    type Target = Dense<T>;
+
+    fn deref(&self) -> &Dense<T> {
+        self.0.as_ref().expect("workspace buffer already returned")
+    }
+}
+
+impl<T: Value> DerefMut for WsDense<T> {
+    fn deref_mut(&mut self) -> &mut Dense<T> {
+        self.0.as_mut().expect("workspace buffer already returned")
+    }
+}
+
+impl<T: Value> Drop for WsDense<T> {
+    fn drop(&mut self) {
+        if let Some(d) = self.0.take() {
+            put_buffer(d.into_vec());
+        }
+    }
+}
+
+/// Take a zero-filled `dim` workspace vector (pool hit avoids the
+/// allocation, not the zeroing — drivers rely on a clean buffer).
+pub fn take_zeroed<T: Value>(exec: &Arc<Executor>, dim: Dim2) -> WsDense<T> {
+    let count = dim.count();
+    let values = match take_buffer::<T>(count) {
+        Some(mut v) => {
+            v.fill(T::zero());
+            v
+        }
+        None => vec![T::zero(); count],
+    };
+    let dense = Dense::from_vec(exec.clone(), dim, values).expect("pooled buffer matches dim");
+    WsDense(Some(dense))
+}
+
+/// Take a workspace copy of `src` (same shape and executor).
+pub fn take_copy<T: Value>(src: &Dense<T>) -> WsDense<T> {
+    let count = src.shape().count();
+    let values = match take_buffer::<T>(count) {
+        Some(mut v) => {
+            v.copy_from_slice(src.as_slice());
+            v
+        }
+        None => src.as_slice().to_vec(),
+    };
+    let dense = Dense::from_vec(src.executor().clone(), src.shape(), values)
+        .expect("pooled buffer matches src shape");
+    WsDense(Some(dense))
+}
+
+/// (hits, misses) of this thread's pool since the last `reset_stats`.
+/// `misses == 0` over a window means every temporary was recycled.
+pub fn stats() -> (u64, u64) {
+    POOL.with(|p| {
+        let p = p.borrow();
+        (p.hits, p.misses)
+    })
+}
+
+/// Zero the hit/miss counters (the pooled buffers stay).
+pub fn reset_stats() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        p.hits = 0;
+        p.misses = 0;
+    });
+}
+
+/// Drop every pooled buffer and zero the counters.
+pub fn clear() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        p.buffers.clear();
+        p.hits = 0;
+        p.misses = 0;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_by_shape_and_type() {
+        clear();
+        let exec = Executor::reference();
+        {
+            let a = take_zeroed::<f64>(&exec, Dim2::new(10, 1));
+            assert_eq!(a.as_slice(), &[0.0; 10]);
+        } // returned
+        let (h, m) = stats();
+        assert_eq!((h, m), (0, 1));
+
+        {
+            let mut b = take_zeroed::<f64>(&exec, Dim2::new(10, 1));
+            b.as_mut_slice()[3] = 7.0; // dirty it, must be re-zeroed next take
+        }
+        let (h, _) = stats();
+        assert_eq!(h, 1, "second same-shape take must hit");
+
+        let c = take_zeroed::<f64>(&exec, Dim2::new(10, 1));
+        assert_eq!(c.as_slice(), &[0.0; 10], "pool hit must still be zeroed");
+
+        // different length and different type are separate slots
+        let _d = take_zeroed::<f64>(&exec, Dim2::new(11, 1));
+        let _e = take_zeroed::<f32>(&exec, Dim2::new(10, 1));
+        let (_, m) = stats();
+        assert_eq!(m, 3);
+        clear();
+    }
+
+    #[test]
+    fn take_copy_matches_source() {
+        clear();
+        let exec = Executor::reference();
+        let src = Dense::vector(exec.clone(), &[1.0f64, -2.0, 3.5]);
+        let c = take_copy(&src);
+        assert_eq!(c.as_slice(), src.as_slice());
+        assert_eq!(c.shape(), src.shape());
+        drop(c);
+        let c2 = take_copy(&src);
+        assert_eq!(c2.as_slice(), src.as_slice());
+        let (h, m) = stats();
+        assert_eq!((h, m), (1, 1));
+        clear();
+    }
+}

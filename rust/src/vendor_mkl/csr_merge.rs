@@ -21,7 +21,7 @@ use crate::matrix::dense::Dense;
 /// Find the merge-path split point for diagonal `diag`: returns the row
 /// index `i` such that the first `diag` merge steps consume row
 /// boundaries `..i` and nonzeros `..(diag - i)`.
-fn merge_path_search(diag: usize, row_ptrs: &[i32], nnz: usize) -> usize {
+pub(crate) fn merge_path_search(diag: usize, row_ptrs: &[i32], nnz: usize) -> usize {
     let nrows = row_ptrs.len() - 1;
     let mut lo = diag.saturating_sub(nnz);
     let mut hi = diag.min(nrows);
@@ -35,6 +35,27 @@ fn merge_path_search(diag: usize, row_ptrs: &[i32], nnz: usize) -> usize {
         }
     }
     lo
+}
+
+/// Split rows into `parts` contiguous chunks balanced by *work*
+/// (rows + nonzeros), by cutting at merge-grid diagonals. Returns
+/// `parts + 1` monotone row boundaries; each chunk owns whole rows, so
+/// callers need no carry fixup — a thread with a power-law row still
+/// gets it alone while its neighbors take many light rows.
+pub(crate) fn merge_row_splits(row_ptrs: &[i32], nnz: usize, parts: usize) -> Vec<usize> {
+    let nrows = row_ptrs.len() - 1;
+    let parts = parts.max(1);
+    let total = nrows + nnz;
+    let chunk = total.div_ceil(parts);
+    let mut splits = Vec::with_capacity(parts + 1);
+    splits.push(0usize);
+    for t in 1..parts {
+        let d = (t * chunk).min(total);
+        let r = merge_path_search(d, row_ptrs, nnz).min(nrows);
+        splits.push(r.max(*splits.last().unwrap()));
+    }
+    splits.push(nrows);
+    splits
 }
 
 /// x = A b with merge-path scheduling (single rhs).
@@ -196,6 +217,42 @@ mod tests {
             assert!(r >= prev);
             prev = r;
         }
+    }
+
+    #[test]
+    fn row_splits_balanced_and_monotone() {
+        // 6 rows, skewed: row 2 holds most of the nonzeros
+        let rp = [0, 1, 2, 12, 13, 14, 16];
+        let nnz = 16;
+        for parts in [1, 2, 3, 5, 9] {
+            let s = merge_row_splits(&rp, nnz, parts);
+            assert_eq!(s.len(), parts + 1);
+            assert_eq!(s[0], 0);
+            assert_eq!(*s.last().unwrap(), 6);
+            for w in s.windows(2) {
+                assert!(w[0] <= w[1], "monotone: {s:?}");
+            }
+            // every chunk's work (rows + nnz) stays within one grid chunk
+            let total = 6 + nnz;
+            let chunk = total.div_ceil(parts);
+            for t in 0..parts {
+                let rows = s[t + 1] - s[t];
+                let work = rows + (rp[s[t + 1]] - rp[s[t]]) as usize;
+                // a chunk can exceed `chunk` only via one indivisible row
+                let heaviest = (s[t]..s[t + 1])
+                    .map(|i| (rp[i + 1] - rp[i]) as usize)
+                    .max()
+                    .unwrap_or(0);
+                assert!(
+                    work <= chunk + heaviest + 1,
+                    "parts={parts} t={t} work={work} chunk={chunk} splits={s:?}"
+                );
+            }
+        }
+        // empty matrix
+        let s = merge_row_splits(&[0, 0, 0], 0, 4);
+        assert_eq!(s[0], 0);
+        assert_eq!(*s.last().unwrap(), 2);
     }
 
     #[test]

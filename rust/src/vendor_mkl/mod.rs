@@ -13,3 +13,4 @@
 mod csr_merge;
 
 pub use csr_merge::{merge_csr_spmv, VendorCsr};
+pub(crate) use csr_merge::merge_row_splits;

@@ -1,0 +1,348 @@
+//! Fused-kernel equivalence and workspace-reuse properties.
+//!
+//! The fused host kernels (PR "fused Krylov kernels") are designed to be
+//! *bit-identical* to the composed BLAS-1/SpMV sequences they replace on
+//! each executor: same elementary operations in the same order. These
+//! tests state that as a property over random inputs for every format
+//! and both precisions, and verify the solver workspace performs zero
+//! pool misses (= zero Dense allocations) after warm-up.
+
+use std::sync::{Arc, Mutex};
+
+use sparkle::core::executor::Executor;
+use sparkle::core::linop::LinOp;
+use sparkle::kernels::{blas, set_fused_enabled};
+use sparkle::matrix::{Coo, Csr, Dense, Ell, Hybrid, SellP};
+use sparkle::solver::{workspace as ws, BiCgStab, Cg, Gmres, Solver, SolverConfig};
+use sparkle::stop::Criterion;
+use sparkle::testing::prng::Prng;
+use sparkle::testing::prop::{assert_close, for_all, gen_sparse, gen_vec};
+use sparkle::{Dim2, MatrixData, Value};
+
+/// Tests that toggle the global fused switch serialize on this lock and
+/// restore the default before releasing it.
+static FUSED_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_fused() -> std::sync::MutexGuard<'static, ()> {
+    FUSED_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn executors() -> Vec<Arc<Executor>> {
+    vec![
+        Executor::reference(),
+        Executor::par_with_threads(1),
+        Executor::par_with_threads(4),
+    ]
+}
+
+fn vecs<T: Value>(rng: &mut Prng, exec: &Arc<Executor>, n: usize, k: usize) -> Vec<Dense<T>> {
+    (0..k)
+        .map(|_| Dense::vector(exec.clone(), &gen_vec::<T>(rng, n)))
+        .collect()
+}
+
+/// Every fused BLAS-1 primitive matches the composed sequence through
+/// the same public dispatch, bit for bit, on every host executor.
+fn blas1_fused_vs_composed<T: Value>(seed: u64) {
+    let _g = lock_fused();
+    for_all(seed, 8, |rng, case| {
+        let n = 1 + rng.below(9000);
+        for exec in executors() {
+            let vs = vecs::<T>(rng, &exec, n, 6);
+            let (p, q, s, t, v, z) = (&vs[0], &vs[1], &vs[2], &vs[3], &vs[4], &vs[5]);
+            let alpha = T::from_f64(rng.uniform(-2.0, 2.0));
+            let beta = T::from_f64(rng.uniform(-2.0, 2.0));
+            let omega = T::from_f64(rng.uniform(-2.0, 2.0));
+            let what = format!("case {case} n={n} exec={}", exec.name());
+
+            // dot_norm2
+            set_fused_enabled(true);
+            let (xy_f, yy_f) = blas::dot_norm2(&exec, p, q).unwrap();
+            set_fused_enabled(false);
+            let (xy_c, yy_c) = blas::dot_norm2(&exec, p, q).unwrap();
+            assert_eq!((xy_f, yy_f), (xy_c, yy_c), "dot_norm2 {what}");
+
+            // axpy_sub_norm2
+            let (mut xf, mut rf) = (s.clone(), t.clone());
+            let (mut xc, mut rc) = (s.clone(), t.clone());
+            set_fused_enabled(true);
+            let rr_f = blas::axpy_sub_norm2(&exec, alpha, p, q, &mut xf, &mut rf).unwrap();
+            set_fused_enabled(false);
+            let rr_c = blas::axpy_sub_norm2(&exec, alpha, p, q, &mut xc, &mut rc).unwrap();
+            assert_eq!(rr_f, rr_c, "axpy_sub_norm2 scalar {what}");
+            assert_eq!(xf.as_slice(), xc.as_slice(), "axpy_sub_norm2 x {what}");
+            assert_eq!(rf.as_slice(), rc.as_slice(), "axpy_sub_norm2 r {what}");
+
+            // add_scaled
+            let mut of = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let mut oc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            set_fused_enabled(true);
+            blas::add_scaled(&exec, z, alpha, v, &mut of).unwrap();
+            set_fused_enabled(false);
+            blas::add_scaled(&exec, z, alpha, v, &mut oc).unwrap();
+            assert_eq!(of.as_slice(), oc.as_slice(), "add_scaled {what}");
+
+            // update_p (both beta != 0 and the beta == 0 overwrite path)
+            for b in [beta, T::zero()] {
+                let mut pf = s.clone();
+                let mut pc = s.clone();
+                set_fused_enabled(true);
+                blas::update_p(&exec, p, b, omega, v, &mut pf).unwrap();
+                set_fused_enabled(false);
+                blas::update_p(&exec, p, b, omega, v, &mut pc).unwrap();
+                assert_eq!(pf.as_slice(), pc.as_slice(), "update_p {what}");
+
+                let mut pf = s.clone();
+                let mut pc = s.clone();
+                set_fused_enabled(true);
+                blas::update_p_cgs(&exec, p, b, q, &mut pf).unwrap();
+                set_fused_enabled(false);
+                blas::update_p_cgs(&exec, p, b, q, &mut pc).unwrap();
+                assert_eq!(pf.as_slice(), pc.as_slice(), "update_p_cgs {what}");
+            }
+
+            // sub_scaled_norm2
+            let mut rf = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let mut rc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            set_fused_enabled(true);
+            let rr_f = blas::sub_scaled_norm2(&exec, s, omega, t, &mut rf).unwrap();
+            set_fused_enabled(false);
+            let rr_c = blas::sub_scaled_norm2(&exec, s, omega, t, &mut rc).unwrap();
+            assert_eq!(rr_f, rr_c, "sub_scaled_norm2 scalar {what}");
+            assert_eq!(rf.as_slice(), rc.as_slice(), "sub_scaled_norm2 r {what}");
+
+            // axpy2
+            let mut xf = z.clone();
+            let mut xc = z.clone();
+            set_fused_enabled(true);
+            blas::axpy2(&exec, alpha, p, omega, s, &mut xf).unwrap();
+            set_fused_enabled(false);
+            blas::axpy2(&exec, alpha, p, omega, s, &mut xc).unwrap();
+            assert_eq!(xf.as_slice(), xc.as_slice(), "axpy2 {what}");
+
+            // scal_into (both scales and the beta == 0 zero-fill path)
+            for b in [beta, T::zero()] {
+                let mut of = t.clone();
+                let mut oc = t.clone();
+                set_fused_enabled(true);
+                blas::scal_into(&exec, b, p, &mut of).unwrap();
+                set_fused_enabled(false);
+                blas::scal_into(&exec, b, p, &mut oc).unwrap();
+                assert_eq!(of.as_slice(), oc.as_slice(), "scal_into {what}");
+            }
+        }
+    });
+    set_fused_enabled(true);
+}
+
+#[test]
+fn blas1_fused_matches_composed_f64() {
+    blas1_fused_vs_composed::<f64>(0xB1A5);
+}
+
+#[test]
+fn blas1_fused_matches_composed_f32() {
+    blas1_fused_vs_composed::<f32>(0xB1A6);
+}
+
+/// `apply_dot` (fused SpMV + dot) matches apply-then-dot for every
+/// format on every host executor, bit for bit.
+fn apply_dot_all_formats<T: Value>(seed: u64) {
+    let _g = lock_fused();
+    for_all(seed, 6, |rng, case| {
+        let n = 8 + rng.below(300);
+        let data = gen_sparse::<T>(rng, n, n, 5);
+        let bv = gen_vec::<T>(rng, n);
+        let wv = gen_vec::<T>(rng, n);
+        for exec in executors() {
+            let b = Dense::vector(exec.clone(), &bv);
+            let w = Dense::vector(exec.clone(), &wv);
+            let ops: Vec<(&str, Box<dyn LinOp<T>>)> = vec![
+                ("csr", Box::new(Csr::from_data(exec.clone(), &data).unwrap())),
+                ("coo", Box::new(Coo::from_data(exec.clone(), &data).unwrap())),
+                ("ell", Box::new(Ell::from_data(exec.clone(), &data).unwrap())),
+                ("sellp", Box::new(SellP::from_data(exec.clone(), &data).unwrap())),
+                ("hybrid", Box::new(Hybrid::from_data(exec.clone(), &data).unwrap())),
+            ];
+            for (name, a) in &ops {
+                let what = format!("case {case} {name} n={n} exec={}", exec.name());
+                // composed oracle: plain apply + two plain dots
+                set_fused_enabled(false);
+                let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+                a.apply(&b, &mut xc).unwrap();
+                let wx_c = blas::dot(&exec, &w, &xc).unwrap();
+                let xx_c = blas::dot(&exec, &xc, &xc).unwrap();
+                // fused path through the LinOp hook
+                set_fused_enabled(true);
+                let mut xf = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+                let (wx_f, xx_f) = a.apply_dot(&b, &mut xf, &w).unwrap();
+                assert_eq!(xf.as_slice(), xc.as_slice(), "apply_dot x {what}");
+                assert_eq!(wx_f, wx_c, "apply_dot w·x {what}");
+                assert_eq!(xx_f, xx_c, "apply_dot ‖x‖² {what}");
+            }
+        }
+    });
+    set_fused_enabled(true);
+}
+
+#[test]
+fn apply_dot_matches_composed_f64() {
+    apply_dot_all_formats::<f64>(0x5D07);
+}
+
+#[test]
+fn apply_dot_matches_composed_f32() {
+    apply_dot_all_formats::<f32>(0x5D08);
+}
+
+fn spd_system(seed: u64, n: usize) -> (MatrixData<f64>, Vec<f64>) {
+    let mut rng = Prng::new(seed);
+    let mut data = gen_sparse::<f64>(&mut rng, n, n, 3);
+    data.symmetrize();
+    data.shift_diagonal(1.0);
+    let b = gen_vec::<f64>(&mut rng, n);
+    (data, b)
+}
+
+/// Whole solves give the identical iterate whether the fused kernels
+/// are dispatched or the composed fallback runs — the drivers are
+/// numerically invariant under the toggle.
+#[test]
+fn solvers_identical_fused_vs_composed() {
+    let _g = lock_fused();
+    let n = 200;
+    let (spd, bv) = spd_system(0xCafe, n);
+    let mut rng = Prng::new(0xFace);
+    let gen_data = gen_sparse::<f64>(&mut rng, n, n, 4);
+    let crit = Criterion::residual(1e-9, 400);
+
+    for exec in executors() {
+        let solvers: Vec<(Box<dyn Solver<f64>>, &MatrixData<f64>)> = vec![
+            (
+                Box::new(Cg::<f64>::new(SolverConfig::with_criterion(crit.clone()))),
+                &spd,
+            ),
+            (
+                Box::new(BiCgStab::new(SolverConfig::with_criterion(crit.clone()))),
+                &gen_data,
+            ),
+            (
+                Box::new(Gmres::new(SolverConfig::with_criterion(crit.clone()))),
+                &gen_data,
+            ),
+        ];
+        for (solver, data) in solvers {
+            let a = Csr::from_data(exec.clone(), data).unwrap();
+            let b = Dense::vector(exec.clone(), &bv);
+
+            set_fused_enabled(true);
+            let mut xf = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let rf = solver.solve(&a, &b, &mut xf).unwrap();
+
+            set_fused_enabled(false);
+            let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            let rc = solver.solve(&a, &b, &mut xc).unwrap();
+
+            let what = format!("{} on {}", solver.name(), exec.name());
+            assert_eq!(rf.iterations, rc.iterations, "iterations {what}");
+            assert_eq!(rf.resnorm, rc.resnorm, "resnorm {what}");
+            assert_eq!(xf.as_slice(), xc.as_slice(), "solution {what}");
+            assert!(rf.converged, "did not converge: {what}");
+        }
+    }
+    set_fused_enabled(true);
+}
+
+/// Preconditioned CG goes through the z-materialized path; it must
+/// still converge and match across the toggle.
+#[test]
+fn preconditioned_cg_fused_vs_composed() {
+    let _g = lock_fused();
+    let n = 150;
+    let (data, bv) = spd_system(0xBead, n);
+    let exec = Executor::reference();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::vector(exec.clone(), &bv);
+    let jacobi = Arc::new(sparkle::precond::Jacobi::from_csr(&a).unwrap());
+    let solver = Cg::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 500)))
+        .with_preconditioner(jacobi);
+
+    set_fused_enabled(true);
+    let mut xf = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let rf = solver.solve(&a, &b, &mut xf).unwrap();
+    set_fused_enabled(false);
+    let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+    let rc = solver.solve(&a, &b, &mut xc).unwrap();
+    set_fused_enabled(true);
+
+    assert!(rf.converged && rc.converged);
+    assert_eq!(rf.iterations, rc.iterations);
+    assert_eq!(xf.as_slice(), xc.as_slice());
+}
+
+/// After a warm-up solve, repeated solves of the same shape perform
+/// zero workspace misses — i.e. zero Dense allocations per solve.
+/// The pool is thread-local, so this test is isolated by construction.
+#[test]
+fn workspace_zero_misses_after_warmup() {
+    let n = 120;
+    let (data, bv) = spd_system(0xD00d, n);
+    let exec = Executor::reference();
+    let a = Csr::from_data(exec.clone(), &data).unwrap();
+    let b = Dense::vector(exec.clone(), &bv);
+    let crit = Criterion::residual(1e-8, 300);
+
+    let solvers: Vec<Box<dyn Solver<f64>>> = vec![
+        Box::new(Cg::<f64>::new(SolverConfig::with_criterion(crit.clone()))),
+        Box::new(BiCgStab::new(SolverConfig::with_criterion(crit.clone()))),
+        Box::new(Gmres::new(SolverConfig::with_criterion(crit.clone()))),
+    ];
+    for solver in solvers {
+        ws::clear();
+        // warm-up populates the pool
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        solver.solve(&a, &b, &mut x).unwrap();
+        let (_, cold_misses) = ws::stats();
+        assert!(cold_misses > 0, "{}: warm-up must populate pool", solver.name());
+
+        ws::reset_stats();
+        for _ in 0..3 {
+            let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+            solver.solve(&a, &b, &mut x).unwrap();
+        }
+        let (hits, misses) = ws::stats();
+        assert_eq!(
+            misses,
+            0,
+            "{}: warm solves must reuse every buffer ({hits} hits)",
+            solver.name()
+        );
+        assert!(hits > 0, "{}: warm solves must use the pool", solver.name());
+    }
+    ws::clear();
+}
+
+/// Par fused reductions agree with the sequential reference to high
+/// accuracy (they are designed to be thread-count independent, and the
+/// block structure matches the reference order per block).
+#[test]
+fn par_fused_close_to_reference() {
+    for_all(0xACC0, 6, |rng, _| {
+        let n = 1 + rng.below(30_000);
+        let xv = gen_vec::<f64>(rng, n);
+        let yv = gen_vec::<f64>(rng, n);
+        let er = Executor::reference();
+        let xr = Dense::vector(er.clone(), &xv);
+        let yr = Dense::vector(er.clone(), &yv);
+        let (xy_r, yy_r) = blas::dot_norm2(&er, &xr, &yr).unwrap();
+        for threads in [2, 8] {
+            let ep = Executor::par_with_threads(threads);
+            let xp = Dense::vector(ep.clone(), &xv);
+            let yp = Dense::vector(ep.clone(), &yv);
+            let (xy_p, yy_p) = blas::dot_norm2(&ep, &xp, &yp).unwrap();
+            // blocked vs sequential summation order: ~n·eps drift
+            assert_close(&[xy_p], &[xy_r], 1e-9, "dot_norm2 xy par vs ref");
+            assert_close(&[yy_p], &[yy_r], 1e-9, "dot_norm2 yy par vs ref");
+        }
+    });
+}
