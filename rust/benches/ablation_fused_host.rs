@@ -1,14 +1,17 @@
 //! Ablation: fused host kernels vs the composed BLAS-1/SpMV baseline.
 //!
-//! Runs fixed-iteration CG and BiCGSTAB solves over the matgen suite on
-//! the `par` executor twice through the *same* driver code: once with
-//! the fused kernels disabled (composed baseline) and once enabled. The
-//! fused kernels are bit-identical to the composed sequences, so any
-//! difference is purely memory traffic. Reports the per-matrix speedup
+//! Runs fixed-iteration CG, BiCGSTAB and restarted GMRES solves over
+//! the matgen suite on the `par` executor twice through the *same*
+//! driver code: once with the fused kernels disabled (composed
+//! baseline) and once enabled. The fused kernels are bit-identical to
+//! the composed sequences, so any difference is purely memory traffic
+//! (GMRES exercises the batched MGS kernels — one sweep of w per basis
+//! vector instead of two). Reports the per-matrix speedup
 //! `composed/fused` and the geometric mean; the smoke gate fails if
-//! fused is more than 5 % slower than composed anywhere. Also verifies
-//! the solver workspace performs zero pool misses (= zero Dense
-//! allocations) on repeated solves after warm-up.
+//! fused is more than 5 % slower than composed anywhere — including
+//! the GMRES rows. Also verifies the solver workspace performs zero
+//! pool misses (= zero Dense allocations) on repeated CG and GMRES
+//! solves after warm-up.
 //!
 //! Emits `BENCH_fused_host.json` (machine-readable) next to the table.
 
@@ -19,7 +22,7 @@ use sparkle::core::executor::Executor;
 use sparkle::kernels::set_fused_enabled;
 use sparkle::matrix::{Csr, Dense};
 use sparkle::resilience::BreakdownPolicy;
-use sparkle::solver::{workspace as ws, BiCgStab, Cg, Solver, SolverConfig};
+use sparkle::solver::{workspace as ws, BiCgStab, Cg, Gmres, Solver, SolverConfig};
 use sparkle::stop::Criterion;
 use sparkle::Dim2;
 
@@ -104,6 +107,13 @@ fn main() {
                 Box::new(BiCgStab::new(solver_config())),
                 Csr::from_data(exec.clone(), &gen).unwrap(),
             ),
+            (
+                // short restart keeps the basis resident while still
+                // exercising multi-vector mgs_project/mgs_update sweeps
+                "gmres",
+                Box::new(Gmres::new(solver_config()).with_restart(10)),
+                Csr::from_data(exec.clone(), &gen).unwrap(),
+            ),
         ];
         for (name, solver, a) in &cases {
             let (composed_us, fused_us) = time_solver(&timer, solver.as_ref(), a, &b, &mut x);
@@ -167,7 +177,10 @@ fn main() {
     }
 }
 
-/// Warm one solve shape, then count pool misses over repeated solves.
+/// Warm one solve shape per solver, then count pool misses over
+/// repeated CG and GMRES solves. GMRES is the stress case: the Krylov
+/// basis is `restart + 1` pooled vectors per solve, so a leak anywhere
+/// in the basis recycling shows up here as a miss.
 fn workspace_misses_after_warmup(
     exec: &std::sync::Arc<Executor>,
     scale: usize,
@@ -178,17 +191,26 @@ fn workspace_misses_after_warmup(
     let mut spd = m.data.clone();
     spd.symmetrize();
     spd.shift_diagonal(1.0);
-    let a = Csr::from_data(exec.clone(), &spd).unwrap();
+    let mut gen = m.data.clone();
+    gen.shift_diagonal(1.0);
+    let a_spd = Csr::from_data(exec.clone(), &spd).unwrap();
+    let a_gen = Csr::from_data(exec.clone(), &gen).unwrap();
     let b = Dense::filled(exec.clone(), Dim2::new(n, 1), 1.0);
-    let solver = Cg::new(solver_config());
+    let cg = Cg::new(solver_config());
+    let gmres = Gmres::new(solver_config()).with_restart(10);
 
     ws::clear();
     let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
-    solver.solve(&a, &b, &mut x).unwrap(); // warm-up populates the pool
+    // warm-up populates the pool for both solver shapes
+    cg.solve(&a_spd, &b, &mut x).unwrap();
+    x.fill(0.0);
+    gmres.solve(&a_gen, &b, &mut x).unwrap();
     ws::reset_stats();
     for _ in 0..5 {
         x.fill(0.0);
-        solver.solve(&a, &b, &mut x).unwrap();
+        cg.solve(&a_spd, &b, &mut x).unwrap();
+        x.fill(0.0);
+        gmres.solve(&a_gen, &b, &mut x).unwrap();
     }
     let (_, misses) = ws::stats();
     misses

@@ -20,6 +20,7 @@ use crate::core::linop::LinOp;
 use crate::core::matrix_data::MatrixData;
 use crate::core::types::Value;
 use crate::matrix::{Coo, Csr, Ell, Hybrid, SellP};
+use crate::solver::workspace as ws;
 
 use super::prior::FormatChoice;
 
@@ -100,8 +101,12 @@ pub fn measure_formats<T: Value>(
     policy: MeasurePolicy,
 ) -> Vec<Measurement> {
     let dim = data.dim;
-    let b = crate::matrix::Dense::filled(exec.clone(), Dim2::new(dim.cols, 1), T::one());
-    let mut x = crate::matrix::Dense::zeros(exec.clone(), Dim2::new(dim.rows, 1));
+    // trial operands come from the solver workspace pool: once a shape
+    // has warmed the pool, re-tunes perform zero Dense allocations, so
+    // no candidate's timing is skewed by a cold allocation
+    let mut b = ws::take_zeroed::<T>(exec, Dim2::new(dim.cols, 1));
+    b.fill(T::one());
+    let mut x = ws::take_zeroed::<T>(exec, Dim2::new(dim.rows, 1));
     let mut out = Vec::with_capacity(formats.len());
     'candidates: for &format in formats {
         let Ok(op) = build_format(exec.clone(), data, format) else {

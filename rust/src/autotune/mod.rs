@@ -28,5 +28,5 @@ pub mod prior;
 pub use auto::{AutoConfig, AutoMatrix, AutoReport, ChoiceSource};
 pub use cache::{cache_key, CacheEntry, TuneCache};
 pub use features::Features;
-pub use measure::{Measurement, MeasurePolicy};
+pub use measure::{measure_formats, Measurement, MeasurePolicy};
 pub use prior::{rank, Candidate, FormatChoice};

@@ -519,6 +519,180 @@ pub fn scal_into<T: Value>(
     }
 }
 
+fn composed_dot_axpy<T: Value>(exec: &Arc<Executor>, v: &Dense<T>, w: &mut Dense<T>) -> Result<T> {
+    let h = dot(exec, w, v)?;
+    axpy(exec, -h, v, w)?;
+    Ok(h)
+}
+
+/// Fused MGS projection pair `h = <w, v>; w -= h·v` in one sweep
+/// (replaces `dot` + `axpy`).
+pub fn dot_axpy<T: Value>(exec: &Arc<Executor>, v: &Dense<T>, w: &mut Dense<T>) -> Result<T> {
+    check_same_len("dot_axpy", v, w)?;
+    if !super::fused_enabled() {
+        return composed_dot_axpy(exec, v, w);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = fused_guard::<T>(FusedBlasKind::DotAxpy, exec, v.len());
+            Ok(reference::dot_axpy(v.as_slice(), w.as_mut_slice()))
+        }
+        Executor::Par(cfg) => {
+            let _obs = fused_guard::<T>(FusedBlasKind::DotAxpy, exec, v.len());
+            Ok(par::dot_axpy(cfg, v.as_slice(), w.as_mut_slice()))
+        }
+        Executor::Xla(_) => composed_dot_axpy(exec, v, w),
+    }
+}
+
+// ------------------------------------------------------------ batched MGS
+//
+// The GMRES orthogonalization works on a growing block of basis
+// vectors, so these two take a `&[&Dense<T>]` block instead of fixed
+// operands. Traffic depends on the basis size k — the guards use the
+// explicit `perfmodel::traffic::mgs_*` models rather than a
+// `FusedBlasKind` entry.
+
+/// Observe guard for the batched MGS projection over a k-vector basis.
+#[inline]
+fn mgs_project_guard<T: Value>(
+    exec: &Arc<Executor>,
+    k: usize,
+    n: usize,
+) -> Option<observe::KernelGuard> {
+    observe::blas_guard(
+        "mgs_project",
+        exec.name(),
+        crate::perfmodel::traffic::mgs_project_flops(k, n),
+        crate::perfmodel::traffic::mgs_project_bytes(k, n, T::PRECISION),
+    )
+}
+
+/// Observe guard for the batched basis update over a k-vector basis.
+#[inline]
+fn mgs_update_guard<T: Value>(
+    exec: &Arc<Executor>,
+    k: usize,
+    n: usize,
+) -> Option<observe::KernelGuard> {
+    observe::blas_guard(
+        "mgs_update",
+        exec.name(),
+        crate::perfmodel::traffic::mgs_update_flops(k, n),
+        crate::perfmodel::traffic::mgs_update_bytes(k, n, T::PRECISION),
+    )
+}
+
+fn composed_mgs_project<T: Value>(
+    exec: &Arc<Executor>,
+    basis: &[&Dense<T>],
+    w: &mut Dense<T>,
+    h: &mut [T],
+) -> Result<T> {
+    for (i, vi) in basis.iter().enumerate() {
+        let hij = dot(exec, w, vi)?;
+        h[i] = hij;
+        axpy(exec, -hij, vi, w)?;
+    }
+    dot(exec, w, w)
+}
+
+/// Full modified-Gram-Schmidt sweep of `w` against the basis block:
+/// `h[i] = <w, v_i>; w -= h[i]·v_i` for every column, returning `<w, w>`
+/// of the projected remainder (the caller takes the square root for the
+/// subdiagonal Hessenberg entry). The fused host kernels pipeline the
+/// subtraction of column i with the projection onto column i+1, so `w`
+/// is swept once per basis vector instead of twice — bit-identical to
+/// the composed `dot`/`axpy`/`dot` chain per executor.
+pub fn mgs_project<T: Value>(
+    exec: &Arc<Executor>,
+    basis: &[&Dense<T>],
+    w: &mut Dense<T>,
+    h: &mut [T],
+) -> Result<T> {
+    for &vi in basis {
+        check_same_len("mgs_project", vi, w)?;
+    }
+    if h.len() < basis.len() {
+        return Err(SparkleError::dim(
+            "mgs_project",
+            format!(
+                "{} coefficient slots for {} basis vectors",
+                h.len(),
+                basis.len()
+            ),
+        ));
+    }
+    if !super::fused_enabled() {
+        return composed_mgs_project(exec, basis, w, h);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = mgs_project_guard::<T>(exec, basis.len(), w.len());
+            let vs: Vec<&[T]> = basis.iter().map(|v| v.as_slice()).collect();
+            Ok(reference::mgs_project(&vs, w.as_mut_slice(), h))
+        }
+        Executor::Par(cfg) => {
+            let _obs = mgs_project_guard::<T>(exec, basis.len(), w.len());
+            let vs: Vec<&[T]> = basis.iter().map(|v| v.as_slice()).collect();
+            Ok(par::mgs_project(cfg, &vs, w.as_mut_slice(), h))
+        }
+        Executor::Xla(_) => composed_mgs_project(exec, basis, w, h),
+    }
+}
+
+fn composed_mgs_update<T: Value>(
+    exec: &Arc<Executor>,
+    basis: &[&Dense<T>],
+    y: &[T],
+    x: &mut Dense<T>,
+) -> Result<()> {
+    for (j, vj) in basis.iter().enumerate() {
+        axpy(exec, y[j], vj, x)?;
+    }
+    Ok(())
+}
+
+/// Batched basis update `x += Σ_j y_j·v_j` (gemv-like over the basis
+/// block; replaces one `axpy` per column with a single sweep of `x`).
+pub fn mgs_update<T: Value>(
+    exec: &Arc<Executor>,
+    basis: &[&Dense<T>],
+    y: &[T],
+    x: &mut Dense<T>,
+) -> Result<()> {
+    if basis.len() != y.len() {
+        return Err(SparkleError::dim(
+            "mgs_update",
+            format!("{} coefficients for {} basis vectors", y.len(), basis.len()),
+        ));
+    }
+    for &vj in basis {
+        check_same_len("mgs_update", vj, x)?;
+    }
+    if basis.is_empty() {
+        return Ok(());
+    }
+    if !super::fused_enabled() {
+        return composed_mgs_update(exec, basis, y, x);
+    }
+    match &**exec {
+        Executor::Reference => {
+            let _obs = mgs_update_guard::<T>(exec, basis.len(), x.len());
+            let vs: Vec<&[T]> = basis.iter().map(|v| v.as_slice()).collect();
+            reference::mgs_update(&vs, y, x.as_mut_slice());
+            Ok(())
+        }
+        Executor::Par(cfg) => {
+            let _obs = mgs_update_guard::<T>(exec, basis.len(), x.len());
+            let vs: Vec<&[T]> = basis.iter().map(|v| v.as_slice()).collect();
+            par::mgs_update(cfg, &vs, y, x.as_mut_slice());
+            Ok(())
+        }
+        Executor::Xla(_) => composed_mgs_update(exec, basis, y, x),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -268,6 +268,61 @@ pub fn scal_into<T: Value>(cfg: &ParConfig, beta: T, x: &[T], out: &mut [T]) {
     });
 }
 
+/// Fused MGS projection pair `h = <w, v>; w -= h·v` (one blocked
+/// reduction plus one split update sweep).
+pub fn dot_axpy<T: Value>(cfg: &ParConfig, v: &[T], w: &mut [T]) -> T {
+    let h = dot(cfg, w, v);
+    axpy(cfg, -h, v, w);
+    h
+}
+
+/// Full MGS sweep of `w` against the basis block, returning `<w, w>` of
+/// the remainder. Each pipelined stage runs as one blocked reduction on
+/// the exact blocks `dot` uses: the elementwise subtraction is split-
+/// invisible and the partials combine in the fixed tree order, so the
+/// result is bit-identical to the composed `dot`/`axpy` chain for any
+/// thread count.
+pub fn mgs_project<T: Value>(cfg: &ParConfig, basis: &[&[T]], w: &mut [T], h: &mut [T]) -> T {
+    let k = basis.len();
+    if k == 0 {
+        return dot(cfg, w, w);
+    }
+    h[0] = dot(cfg, w, basis[0]);
+    let n = w.len();
+    let wptr = SlicePtr(w.as_mut_ptr());
+    for i in 1..k {
+        let hp = h[i - 1];
+        let (vp, vi) = (basis[i - 1], basis[i]);
+        h[i] = blocked_reduce(cfg, n, |s, e| {
+            // SAFETY: reduce blocks are disjoint across threads.
+            let ws = unsafe { wptr.range(s, e - s) };
+            reference::mgs_step(hp, &vp[s..e], &vi[s..e], ws)
+        });
+    }
+    let hl = h[k - 1];
+    let vl = basis[k - 1];
+    blocked_reduce(cfg, n, |s, e| {
+        // SAFETY: reduce blocks are disjoint across threads.
+        let ws = unsafe { wptr.range(s, e - s) };
+        reference::mgs_finish(hl, &vl[s..e], ws)
+    })
+}
+
+/// Batched basis update `x += Σ_j y_j·v_j`, rows split across threads.
+pub fn mgs_update<T: Value>(cfg: &ParConfig, basis: &[&[T]], y: &[T], x: &mut [T]) {
+    let ptr = SlicePtr(x.as_mut_ptr());
+    par_for(cfg, x.len(), |_, s, e| {
+        let xs = unsafe { ptr.range(s, e - s) };
+        for (off, xe) in xs.iter_mut().enumerate() {
+            let mut acc = *xe;
+            for (v, &c) in basis.iter().zip(y) {
+                acc += c * v[s + off];
+            }
+            *xe = acc;
+        }
+    });
+}
+
 // ------------------------------------------------------------------ SpMV
 
 /// CSR SpMV, rows split across threads at merge-grid diagonals so each
@@ -688,6 +743,69 @@ mod tests {
         let mut zc = p.clone();
         scal(&c, beta, &mut zc);
         assert_eq!(zf, zc);
+    }
+
+    #[test]
+    fn fused_mgs_matches_composed_and_thread_count() {
+        // n spans several 4096-blocks so the parallel fill is exercised
+        let mut rng = Prng::new(13);
+        let n = 10_000;
+        let c = ParConfig {
+            threads: 4,
+            seq_threshold: 0,
+        };
+        let basis_data: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let basis: Vec<&[f64]> = basis_data.iter().map(|v| v.as_slice()).collect();
+        let w0: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        // dot_axpy == dot + axpy(-h)
+        let mut wf = w0.clone();
+        let hf = dot_axpy(&c, basis[0], &mut wf);
+        let mut wc = w0.clone();
+        let hc = dot(&c, &wc, basis[0]);
+        axpy(&c, -hc, basis[0], &mut wc);
+        assert_eq!(hf, hc);
+        assert_eq!(wf, wc);
+
+        // mgs_project == composed chain on this backend, bit for bit
+        let mut wf = w0.clone();
+        let mut hfv = vec![0.0f64; 3];
+        let ww = mgs_project(&c, &basis, &mut wf, &mut hfv);
+        let mut wc = w0.clone();
+        let mut hcv = vec![0.0f64; 3];
+        for (i, v) in basis.iter().enumerate() {
+            hcv[i] = dot(&c, &wc, v);
+            axpy(&c, -hcv[i], v, &mut wc);
+        }
+        assert_eq!(hfv, hcv);
+        assert_eq!(wf, wc);
+        assert_eq!(ww, dot(&c, &wc, &wc));
+
+        // thread-count independence of the staged reductions
+        for threads in [1, 2, 8] {
+            let ct = ParConfig {
+                threads,
+                seq_threshold: 0,
+            };
+            let mut wt = w0.clone();
+            let mut ht = vec![0.0f64; 3];
+            let wwt = mgs_project(&ct, &basis, &mut wt, &mut ht);
+            assert_eq!(ht, hfv, "threads {threads}");
+            assert_eq!(wt, wf, "threads {threads}");
+            assert_eq!(wwt, ww, "threads {threads}");
+        }
+
+        // mgs_update == composed axpy sequence
+        let y = [0.5f64, -1.25, 2.0];
+        let mut xf = w0.clone();
+        mgs_update(&c, &basis, &y, &mut xf);
+        let mut xc = w0.clone();
+        for (j, v) in basis.iter().enumerate() {
+            axpy(&c, y[j], v, &mut xc);
+        }
+        assert_eq!(xf, xc);
     }
 
     #[test]

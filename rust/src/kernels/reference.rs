@@ -180,6 +180,75 @@ pub fn scal_into<T: Value>(beta: T, x: &[T], out: &mut [T]) {
     }
 }
 
+/// Fused MGS projection pair: `h = <w, v>; w -= h·v`, returning `h`.
+///
+/// Replaces `dot(w, v)` + `axpy(-h, v, w)` — the subtraction runs while
+/// `w` and `v` are still cache-hot instead of as a second dispatch.
+pub fn dot_axpy<T: Value>(v: &[T], w: &mut [T]) -> T {
+    let h = dot(w, v);
+    axpy(-h, v, w);
+    h
+}
+
+/// One pipelined MGS stage: `w -= h_prev·v_prev` and accumulate the next
+/// projection `<w, v_next>` in the same sweep. Per element the update
+/// and the product are the exact operations the composed
+/// `axpy(-h_prev, v_prev, w)` + `dot(w, v_next)` pair performs, in the
+/// same order, so the pipelining is bitwise-invisible.
+pub fn mgs_step<T: Value>(h_prev: T, v_prev: &[T], v_next: &[T], w: &mut [T]) -> T {
+    let mut acc = T::zero();
+    for i in 0..w.len() {
+        w[i] += -h_prev * v_prev[i];
+        acc += w[i] * v_next[i];
+    }
+    acc
+}
+
+/// Final pipelined MGS stage: `w -= h_last·v_last` and accumulate
+/// `<w, w>` of the projected remainder in the same sweep.
+pub fn mgs_finish<T: Value>(h_last: T, v_last: &[T], w: &mut [T]) -> T {
+    let mut acc = T::zero();
+    for i in 0..w.len() {
+        w[i] += -h_last * v_last[i];
+        acc += w[i] * w[i];
+    }
+    acc
+}
+
+/// Full modified-Gram-Schmidt sweep of `w` against the basis block:
+/// `h[i] = <w, v_i>; w -= h[i]·v_i` for every column, returning `<w, w>`
+/// of the remainder (the caller takes the square root for `‖w‖`).
+///
+/// Replaces the composed `dot` + `axpy` pair per basis vector plus the
+/// trailing `norm2`: each stage subtracts the previous projection while
+/// accumulating the next one, so `w` is swept once per basis vector
+/// instead of twice — and the norm rides the last subtraction for free.
+pub fn mgs_project<T: Value>(basis: &[&[T]], w: &mut [T], h: &mut [T]) -> T {
+    let k = basis.len();
+    if k == 0 {
+        return dot(w, w);
+    }
+    h[0] = dot(w, basis[0]);
+    for i in 1..k {
+        h[i] = mgs_step(h[i - 1], basis[i - 1], basis[i], w);
+    }
+    mgs_finish(h[k - 1], basis[k - 1], w)
+}
+
+/// Batched basis update `x += Σ_j y_j·v_j` (gemv-like over the basis
+/// block): per element the additions run in basis order, exactly the
+/// composed `axpy` sequence, so results are bit-identical while `x` is
+/// swept once instead of once per column.
+pub fn mgs_update<T: Value>(basis: &[&[T]], y: &[T], x: &mut [T]) {
+    for e in 0..x.len() {
+        let mut acc = x[e];
+        for (v, &c) in basis.iter().zip(y) {
+            acc += c * v[e];
+        }
+        x[e] = acc;
+    }
+}
+
 // ------------------------------------------------------------------ SpMV
 
 /// CSR SpMV: x = A b (multi-rhs aware).
@@ -539,6 +608,55 @@ mod tests {
         let mut z0 = vec![f64::NAN; n];
         scal_into(0.0, &p, &mut z0);
         assert_eq!(z0, vec![0.0; n]);
+    }
+
+    #[test]
+    fn fused_mgs_matches_composed_bitwise() {
+        let n = 41;
+        let basis_data: Vec<Vec<f64>> = (0..4)
+            .map(|j| {
+                (0..n)
+                    .map(|i| (i as f64 * 0.17 + j as f64 * 0.61).sin())
+                    .collect()
+            })
+            .collect();
+        let basis: Vec<&[f64]> = basis_data.iter().map(|v| v.as_slice()).collect();
+        let w0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.29).cos()).collect();
+
+        // dot_axpy == dot + axpy(-h)
+        let mut wf = w0.clone();
+        let hf = dot_axpy(basis[0], &mut wf);
+        let mut wc = w0.clone();
+        let hc = dot(&wc, basis[0]);
+        axpy(-hc, basis[0], &mut wc);
+        assert_eq!(hf, hc);
+        assert_eq!(wf, wc);
+
+        // mgs_project == the composed dot/axpy chain + trailing dot(w, w)
+        for k in 0..=basis.len() {
+            let mut wf = w0.clone();
+            let mut hfv = vec![0.0f64; k];
+            let ww = mgs_project(&basis[..k], &mut wf, &mut hfv);
+            let mut wc = w0.clone();
+            let mut hcv = vec![0.0f64; k];
+            for (i, v) in basis[..k].iter().enumerate() {
+                hcv[i] = dot(&wc, v);
+                axpy(-hcv[i], v, &mut wc);
+            }
+            assert_eq!(hfv, hcv, "k = {k}");
+            assert_eq!(wf, wc, "k = {k}");
+            assert_eq!(ww, dot(&wc, &wc), "k = {k}");
+        }
+
+        // mgs_update == the composed axpy sequence over the block
+        let y = [0.5f64, -1.25, 0.8125, 2.0];
+        let mut xf = w0.clone();
+        mgs_update(&basis, &y, &mut xf);
+        let mut xc = w0.clone();
+        for (j, v) in basis.iter().enumerate() {
+            axpy(y[j], v, &mut xc);
+        }
+        assert_eq!(xf, xc);
     }
 
     #[test]

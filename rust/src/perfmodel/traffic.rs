@@ -72,6 +72,8 @@ pub enum FusedBlasKind {
     Axpy2,
     /// `out = βx` (replaces `copy` + `scal`).
     ScalInto,
+    /// `h = <w, v>; w -= h·v` (replaces `dot` + `axpy`).
+    DotAxpy,
 }
 
 impl FusedBlasKind {
@@ -86,6 +88,7 @@ impl FusedBlasKind {
             FusedBlasKind::SubScaledNorm2 => "sub_scaled_norm2",
             FusedBlasKind::Axpy2 => "axpy2",
             FusedBlasKind::ScalInto => "scal_into",
+            FusedBlasKind::DotAxpy => "dot_axpy",
         }
     }
 
@@ -100,6 +103,7 @@ impl FusedBlasKind {
             FusedBlasKind::SubScaledNorm2 => 4.0,
             FusedBlasKind::Axpy2 => 4.0,
             FusedBlasKind::ScalInto => 1.0,
+            FusedBlasKind::DotAxpy => 4.0,
         }
     }
 
@@ -114,6 +118,7 @@ impl FusedBlasKind {
             FusedBlasKind::SubScaledNorm2 => 3.0,
             FusedBlasKind::Axpy2 => 4.0,
             FusedBlasKind::ScalInto => 2.0,
+            FusedBlasKind::DotAxpy => 4.0,
         }
     }
 
@@ -129,6 +134,7 @@ impl FusedBlasKind {
             FusedBlasKind::SubScaledNorm2 => 6.0,
             FusedBlasKind::Axpy2 => 6.0,
             FusedBlasKind::ScalInto => 4.0,
+            FusedBlasKind::DotAxpy => 5.0,
         }
     }
 
@@ -141,6 +147,53 @@ impl FusedBlasKind {
     pub fn flops(self, n: usize) -> f64 {
         self.flops_per_elem() * n as f64
     }
+}
+
+// ------------------------------------------------------------ batched MGS
+//
+// The GMRES orthogonalization works on a *growing* block of k basis
+// vectors, so its per-call traffic depends on k and doesn't fit the
+// fixed-shape `FusedBlasKind` table. These model the two gemv-like
+// batched kernels; the composed figures are what the equivalent
+// dot/axpy chain (plus trailing norm reduction) would move.
+
+/// Useful FLOPs of one fused MGS projection sweep over a k-vector basis
+/// of length-`n` columns: a 2-flop dot plus a 2-flop subtraction per
+/// element and basis vector, plus the trailing `<w, w>` — identical
+/// work to the composed chain, fusion only cuts bytes.
+pub fn mgs_project_flops(k: usize, n: usize) -> f64 {
+    ((4 * k + 2) * n) as f64
+}
+
+/// Useful bytes of the fused projection sweep: a leading 2-stream dot,
+/// then one pipelined 4-stream pass of `w` per remaining basis vector
+/// (v_prev, v_next, w read + write), and a 3-stream finishing pass —
+/// `(4k + 1)·n` elements in total.
+pub fn mgs_project_bytes(k: usize, n: usize, p: Precision) -> f64 {
+    let streams = if k == 0 { 1 } else { 4 * k + 1 };
+    (streams * n) as f64 * p.bytes() as f64
+}
+
+/// Bytes the composed sequence (k × (`dot` + `axpy`) + trailing `dot`)
+/// would move: `(5k + 1)·n` elements.
+pub fn mgs_project_composed_bytes(k: usize, n: usize, p: Precision) -> f64 {
+    ((5 * k + 1) * n) as f64 * p.bytes() as f64
+}
+
+/// Useful FLOPs of the batched basis update `x += Σ_j y_j·v_j`.
+pub fn mgs_update_flops(k: usize, n: usize) -> f64 {
+    (2 * k * n) as f64
+}
+
+/// Useful bytes of the batched update: each basis column read once plus
+/// one read + write of `x` — `(k + 2)·n` elements.
+pub fn mgs_update_bytes(k: usize, n: usize, p: Precision) -> f64 {
+    ((k + 2) * n) as f64 * p.bytes() as f64
+}
+
+/// Bytes the composed k-`axpy` sequence would move: `3k·n` elements.
+pub fn mgs_update_composed_bytes(k: usize, n: usize, p: Precision) -> f64 {
+    (3 * k * n) as f64 * p.bytes() as f64
 }
 
 /// Useful FLOPs of one SpMV (the paper counts 2 per stored nonzero).
@@ -298,6 +351,7 @@ mod tests {
             SubScaledNorm2,
             Axpy2,
             ScalInto,
+            DotAxpy,
         ] {
             assert!(
                 k.streams() < k.composed_streams(),
@@ -323,5 +377,41 @@ mod tests {
             .map(|k| k.composed_streams())
             .sum();
         assert!(composed - fused >= 2.0);
+    }
+
+    #[test]
+    fn batched_mgs_models_save_bytes_never_flops() {
+        let n = 1000;
+        for k in 1..=32 {
+            // fusion is traffic-only: identical flops, fewer bytes
+            assert!(
+                mgs_project_bytes(k, n, Precision::Double)
+                    < mgs_project_composed_bytes(k, n, Precision::Double),
+                "k = {k}"
+            );
+            assert!(
+                mgs_update_bytes(k, n, Precision::Double)
+                    <= mgs_update_composed_bytes(k, n, Precision::Double),
+                "k = {k}"
+            );
+            assert!(mgs_project_flops(k, n) > 0.0);
+            assert!(mgs_update_flops(k, n) > 0.0);
+        }
+        // the batched update beats the axpy chain once the basis has
+        // more than one column (k = 1 is a plain axpy either way)
+        assert!(
+            mgs_update_bytes(2, n, Precision::Double)
+                < mgs_update_composed_bytes(2, n, Precision::Double)
+        );
+        // per-iteration sweep count: one sweep of w per basis vector
+        // (4k+1 streams) instead of two plus the norm pass (5k+1)
+        assert_eq!(mgs_project_bytes(8, n, Precision::Single), (33 * n) as f64 * 4.0);
+        assert_eq!(
+            mgs_project_composed_bytes(8, n, Precision::Single),
+            (41 * n) as f64 * 4.0
+        );
+        // empty basis degenerates to the lone trailing reduction
+        assert_eq!(mgs_project_bytes(0, n, Precision::Double), (n * 8) as f64);
+        assert_eq!(mgs_project_flops(0, n), (2 * n) as f64);
     }
 }

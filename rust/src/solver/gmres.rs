@@ -3,9 +3,16 @@
 //! Long recurrence: each new Krylov direction is orthogonalized against
 //! the whole basis (modified Gram-Schmidt), the small Hessenberg least-
 //! squares problem is solved with Givens rotations on the host. The
-//! paper (§6.4) observes GMRES maps worst onto the ported backend — the
-//! growing-basis orthogonalization is also why we keep it on the
-//! composed BLAS-1 path instead of a fused-step artifact.
+//! paper (§6.4) observes GMRES maps worst onto the ported backend
+//! because that growing-basis orthogonalization is a chain of
+//! memory-bound BLAS-1 sweeps. On the host backends the chain now runs
+//! through the batched fused kernels: `blas::mgs_project` pipelines the
+//! projection with the previous subtraction (one sweep of `w` per basis
+//! vector instead of two, the norm reduction riding the last stage) and
+//! `blas::mgs_update` folds the Krylov correction with a single sweep of
+//! `x`. Both are bit-identical to the composed `dot`/`axpy` sequence and
+//! toggled by `kernels::set_fused_enabled` for the ablation baseline; on
+//! the xla executor the composed fallback is used.
 
 use crate::core::error::Result;
 use crate::core::linop::LinOp;
@@ -13,7 +20,7 @@ use crate::core::types::Value;
 use crate::kernels::blas;
 use crate::matrix::dense::Dense;
 use crate::solver::{diverged, workspace as ws, SolveResult, Solver, SolverConfig};
-use crate::stop::StopStatus;
+use crate::stop::{Breakdown, StopStatus};
 
 /// GMRES solver with restart length `m`.
 pub struct Gmres {
@@ -64,7 +71,7 @@ impl<T: Value> Solver<T> for Gmres {
         // Hessenberg in column-major: h[j] has j+2 entries.
         let mut w = ws::take_zeroed(&exec, dim);
 
-        'outer: loop {
+        loop {
             // r = b - A x
             let mut r = ws::take_copy(b);
             a.apply_advanced(-T::one(), x, T::one(), &mut r)?;
@@ -103,14 +110,15 @@ impl<T: Value> Solver<T> for Gmres {
             for j in 0..m {
                 // w = A v_j
                 a.apply(&basis[j], &mut w)?;
-                // modified Gram-Schmidt against the whole basis
+                // modified Gram-Schmidt against the whole basis: one
+                // batched sweep yields the projection coefficients and
+                // ‖w‖² of the remainder
                 let mut h = vec![T::zero(); j + 2];
-                for (i, vi) in basis.iter().enumerate() {
-                    let hij = blas::dot(&exec, &w, vi)?;
-                    h[i] = hij;
-                    blas::axpy(&exec, -hij, vi, &mut w)?;
-                }
-                let wnorm = blas::norm2(&exec, &w)?;
+                let ww = {
+                    let vrefs: Vec<&Dense<T>> = basis.iter().map(|v| &**v).collect();
+                    blas::mgs_project(&exec, &vrefs, &mut w, &mut h[..j + 1])?
+                };
+                let wnorm = ww.sqrt();
                 h[j + 1] = wnorm;
 
                 // apply accumulated Givens rotations to the new column
@@ -151,26 +159,29 @@ impl<T: Value> Solver<T> for Gmres {
                 }
                 if let Some(bd) = det.residual(resnorm) {
                     // stagnation: the iterate is finite, so fold the
-                    // best correction so far before reporting
-                    update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
+                    // best correction so far before reporting (unless
+                    // the triangular solve itself breaks down — then x
+                    // stays untouched and that breakdown wins)
+                    let bd = update_solution(&exec, x, &basis, &h_cols, &g, inner)?.unwrap_or(bd);
                     return Ok(diverged(total_iters, resnorm, history, bd));
                 }
                 if status != StopStatus::Continue || wnorm.is_zero() {
                     // solve the j+1 upper-triangular system, update x
-                    update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
-                    if status == StopStatus::Converged || wnorm.is_zero() {
-                        return Ok(SolveResult {
-                            iterations: total_iters,
-                            resnorm,
-                            converged: true,
-                            status: StopStatus::Converged,
-                            history,
-                        });
+                    if let Some(bd) = update_solution(&exec, x, &basis, &h_cols, &g, inner)? {
+                        return Ok(diverged(total_iters, resnorm, history, bd));
                     }
+                    // happy breakdown (wnorm == 0) only means the Krylov
+                    // space cannot grow — convergence is whatever
+                    // `crit.check` actually reported, never implied
+                    let status = if status == StopStatus::Continue {
+                        StopStatus::Diverged(Breakdown::ZeroDenominator { what: "wnorm" })
+                    } else {
+                        status
+                    };
                     return Ok(SolveResult {
                         iterations: total_iters,
                         resnorm,
-                        converged: false,
+                        converged: status == StopStatus::Converged,
                         status,
                         history,
                     });
@@ -180,10 +191,11 @@ impl<T: Value> Solver<T> for Gmres {
                 blas::scal_into(&exec, T::one() / wnorm, &w, &mut vnext)?;
                 basis.push(vnext);
             }
-            // restart: fold the Krylov correction into x, continue
-            update_solution(&exec, x, &basis, &h_cols, &g, inner)?;
-            if crit.max_iters > 0 && total_iters >= crit.max_iters {
-                continue 'outer; // handled at loop head
+            // restart: fold the Krylov correction into x and re-enter
+            // the outer loop (its head recomputes the true residual and
+            // re-checks the criterion, including the iteration budget)
+            if let Some(bd) = update_solution(&exec, x, &basis, &h_cols, &g, inner)? {
+                return Ok(diverged(total_iters, resnorm, history, bd));
             }
         }
     }
@@ -193,18 +205,32 @@ impl<T: Value> Solver<T> for Gmres {
     }
 
     fn flops_per_iter(&self, nnz: usize, n: usize) -> u64 {
-        // 1 SpMV + (avg restart/2 + 1) orthogonalization dot+axpy pairs
+        // 1 SpMV + the batched MGS sweep at the average basis size
+        // (restart/2 + 1): 4 flops per element and basis vector
+        // (projection dot + subtraction), plus the trailing ‖w‖² and
+        // the basis normalization (see perfmodel::traffic::mgs_*)
         let avg_basis = (self.restart / 2 + 1) as u64;
-        2 * nnz as u64 + avg_basis * 4 * n as u64 + 2 * n as u64
+        2 * nnz as u64 + (4 * avg_basis + 2) * n as u64 + n as u64
     }
 
     fn bytes_per_iter(&self, nnz: usize, n: usize, elem: usize) -> u64 {
+        // SpMV footprint + the fused MGS traffic: one pipelined 4-stream
+        // sweep of w per basis vector (the composed chain pays 5) plus
+        // the finishing and normalization passes
         let avg_basis = (self.restart / 2 + 1) as u64;
-        ((nnz * (elem + 8) + 2 * n * elem) as u64) + avg_basis * (5 * n * elem) as u64
+        ((nnz * (elem + 8) + 2 * n * elem) as u64)
+            + (4 * avg_basis + 1) * (n * elem) as u64
+            + (2 * n * elem) as u64
     }
 }
 
-/// x += V_k y where `R y = g` is the Givens-reduced triangular system.
+/// `x += V_k y` where `R y = g` is the Givens-reduced triangular system.
+///
+/// The back substitution is guarded: a zero or non-finite diagonal
+/// `R[i][i]` (degenerate Hessenberg column, e.g. after a breakdown with
+/// a spurious zero residual) would fold Inf/NaN into `x`. In that case
+/// the structured breakdown is returned and `x` stays untouched — the
+/// whole correction is computed before any of it is applied.
 fn update_solution<T: Value>(
     exec: &std::sync::Arc<crate::core::executor::Executor>,
     x: &mut Dense<T>,
@@ -212,26 +238,44 @@ fn update_solution<T: Value>(
     h_cols: &[Vec<T>],
     g: &[T],
     k: usize,
-) -> Result<()> {
+) -> Result<Option<Breakdown>> {
     // back substitution on the k x k triangular system (host, tiny)
     let mut y = vec![T::zero(); k];
     for i in (0..k).rev() {
+        let diag = h_cols[i][i];
+        if diag.is_zero() {
+            return Ok(Some(Breakdown::ZeroDenominator {
+                what: "hessenberg diagonal",
+            }));
+        }
+        if !diag.as_f64().is_finite() {
+            return Ok(Some(Breakdown::NanOperand {
+                what: "hessenberg diagonal",
+            }));
+        }
         let mut acc = g[i];
         for j in i + 1..k {
             acc -= h_cols[j][i] * y[j];
         }
-        y[i] = acc / h_cols[i][i];
+        y[i] = acc / diag;
+        if !y[i].as_f64().is_finite() {
+            return Ok(Some(Breakdown::NanOperand {
+                what: "triangular solve",
+            }));
+        }
     }
-    for j in 0..k {
-        blas::axpy(exec, y[j], &basis[j], x)?;
-    }
-    Ok(())
+    // fold the correction with one batched sweep of x (bit-identical to
+    // the per-column axpy sequence)
+    let vrefs: Vec<&Dense<T>> = basis[..k].iter().map(|v| &**v).collect();
+    blas::mgs_update(exec, &vrefs, &y, x)?;
+    Ok(None)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::executor::Executor;
+    use crate::core::matrix_data::MatrixData;
     use crate::matrix::Csr;
     use crate::stop::Criterion;
     use crate::testing::prng::Prng;
@@ -276,6 +320,67 @@ mod tests {
         let mut r = b.clone();
         a.apply_advanced(-1.0, &x, 1.0, &mut r).unwrap();
         assert!(r.norm2_host() < 1e-6 * b.norm2_host());
+    }
+
+    #[test]
+    fn happy_breakdown_above_tolerance_is_not_converged() {
+        // identity system, b = 2·e_0: the Krylov space is exhausted at
+        // j = 0 (wnorm == 0, exactly — every arithmetic step is a power
+        // of two), but an iteration-only criterion can never report
+        // Converged. The old driver still claimed `converged: true`.
+        let exec = Executor::reference();
+        let n = 4;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            data.push(i as i32, i as i32, 1.0);
+        }
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let mut bv = vec![0.0f64; n];
+        bv[0] = 2.0;
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let result = Gmres::new(SolverConfig::with_criterion(Criterion::iterations(10)))
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(!result.converged, "{result:?}");
+        assert_eq!(
+            result.status,
+            StopStatus::Diverged(Breakdown::ZeroDenominator { what: "wnorm" })
+        );
+        // the best correction was still folded: x solves the system
+        assert_eq!(x.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn zero_hessenberg_diagonal_reports_breakdown_not_convergence() {
+        // A = 0: w = A v_0 = 0 leaves a degenerate Givens column whose
+        // rotation reports a spurious zero residual (so a relative
+        // criterion says Converged) while the Hessenberg diagonal is 0.
+        // The old back substitution divided by it and returned
+        // `converged: true` with x poisoned by Inf/NaN.
+        let exec = Executor::reference();
+        let n = 4;
+        let mut data = MatrixData::<f64>::new(Dim2::square(n));
+        for i in 0..n {
+            data.push(i as i32, i as i32, 0.0);
+        }
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let mut bv = vec![0.0f64; n];
+        bv[0] = 2.0;
+        let b = Dense::vector(exec.clone(), &bv);
+        let mut x = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let result = Gmres::new(SolverConfig::with_criterion(Criterion::residual(1e-10, 50)))
+            .solve(&a, &b, &mut x)
+            .unwrap();
+        assert!(!result.converged, "{result:?}");
+        assert_eq!(
+            result.status,
+            StopStatus::Diverged(Breakdown::ZeroDenominator {
+                what: "hessenberg diagonal"
+            })
+        );
+        // x must stay untouched — no Inf/NaN folded in
+        assert!(x.as_slice().iter().all(|v| *v == 0.0));
     }
 
     #[test]

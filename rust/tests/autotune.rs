@@ -118,6 +118,35 @@ fn auto_apply_matches_hand_picked_csr() {
     }
 }
 
+/// ROADMAP item "workspace-aware autotune": the measurement pass draws
+/// its trial operands from the solver workspace pool, so a warm re-tune
+/// of the same shape performs zero pool misses — zero Dense allocations
+/// skewing a candidate's timing. The pool is thread-local, so the test
+/// is isolated by construction.
+#[test]
+fn measure_reuses_workspace_operands() {
+    use sparkle::autotune::{measure_formats, FormatChoice, MeasurePolicy};
+    use sparkle::solver::workspace as ws;
+
+    let mut rng = Prng::new(35);
+    let data = gen_sparse::<f64>(&mut rng, 80, 80, 5);
+    let exec = Executor::reference();
+
+    ws::clear();
+    let cold = measure_formats(&exec, &data, &FormatChoice::ALL, MeasurePolicy::default());
+    assert_eq!(cold.len(), FormatChoice::ALL.len());
+    let (_, cold_misses) = ws::stats();
+    assert!(cold_misses > 0, "first tune must populate the pool");
+
+    ws::reset_stats();
+    let warm = measure_formats(&exec, &data, &FormatChoice::ALL, MeasurePolicy::default());
+    assert_eq!(warm.len(), cold.len());
+    let (hits, misses) = ws::stats();
+    assert_eq!(misses, 0, "warm re-tune must reuse pooled operands ({hits} hits)");
+    assert!(hits > 0, "warm re-tune must draw from the pool");
+    ws::clear();
+}
+
 #[test]
 fn auto_on_ported_backend_without_artifacts_constructs() {
     // no artifacts dir: measurement probes fail, the prior decides, and

@@ -145,6 +145,102 @@ fn blas1_fused_matches_composed_f32() {
     blas1_fused_vs_composed::<f32>(0xB1A6);
 }
 
+/// The batched MGS kernels (`dot_axpy`, `mgs_project`, `mgs_update`)
+/// match the composed dot/axpy chain through the same public dispatch,
+/// bit for bit, on every host executor and both precisions.
+fn mgs_fused_vs_composed<T: Value>(seed: u64) {
+    let _g = lock_fused();
+    for_all(seed, 6, |rng, case| {
+        let n = 1 + rng.below(6000);
+        let k = 1 + rng.below(6);
+        for exec in executors() {
+            let basis_v = vecs::<T>(rng, &exec, n, k);
+            let vrefs: Vec<&Dense<T>> = basis_v.iter().collect();
+            let w0 = Dense::vector(exec.clone(), &gen_vec::<T>(rng, n));
+            let x0 = Dense::vector(exec.clone(), &gen_vec::<T>(rng, n));
+            let what = format!("case {case} n={n} k={k} exec={}", exec.name());
+
+            // dot_axpy: coefficient and updated w both bitwise equal
+            let mut wf = w0.clone();
+            let mut wc = w0.clone();
+            set_fused_enabled(true);
+            let hf = blas::dot_axpy(&exec, vrefs[0], &mut wf).unwrap();
+            set_fused_enabled(false);
+            let hc = blas::dot_axpy(&exec, vrefs[0], &mut wc).unwrap();
+            assert_eq!(hf, hc, "dot_axpy h {what}");
+            assert_eq!(wf.as_slice(), wc.as_slice(), "dot_axpy w {what}");
+
+            // mgs_project: coefficients, remainder and ‖w‖² all match
+            let mut wf = w0.clone();
+            let mut wc = w0.clone();
+            let mut hfv = vec![T::zero(); k];
+            let mut hcv = vec![T::zero(); k];
+            set_fused_enabled(true);
+            let wwf = blas::mgs_project(&exec, &vrefs, &mut wf, &mut hfv).unwrap();
+            set_fused_enabled(false);
+            let wwc = blas::mgs_project(&exec, &vrefs, &mut wc, &mut hcv).unwrap();
+            assert_eq!(wwf, wwc, "mgs_project ww {what}");
+            assert_eq!(hfv, hcv, "mgs_project h {what}");
+            assert_eq!(wf.as_slice(), wc.as_slice(), "mgs_project w {what}");
+
+            // mgs_update: folded solution bitwise equal
+            let y: Vec<T> = (0..k).map(|_| T::from_f64(rng.uniform(-2.0, 2.0))).collect();
+            let mut xf = x0.clone();
+            let mut xc = x0.clone();
+            set_fused_enabled(true);
+            blas::mgs_update(&exec, &vrefs, &y, &mut xf).unwrap();
+            set_fused_enabled(false);
+            blas::mgs_update(&exec, &vrefs, &y, &mut xc).unwrap();
+            assert_eq!(xf.as_slice(), xc.as_slice(), "mgs_update {what}");
+        }
+    });
+    set_fused_enabled(true);
+}
+
+#[test]
+fn mgs_fused_matches_composed_f64() {
+    mgs_fused_vs_composed::<f64>(0x3650);
+}
+
+#[test]
+fn mgs_fused_matches_composed_f32() {
+    mgs_fused_vs_composed::<f32>(0x3651);
+}
+
+/// A full restarted GMRES solve — restarts exercise `mgs_update` at the
+/// restart boundary and `mgs_project` at every basis size — is invariant
+/// under the fused toggle on every host executor: same iteration count,
+/// same residual, bitwise-identical solution.
+#[test]
+fn gmres_restarted_identical_fused_vs_composed() {
+    let _g = lock_fused();
+    let n = 150;
+    let mut rng = Prng::new(53);
+    let data = gen_sparse::<f64>(&mut rng, n, n, 4);
+    let bv = gen_vec::<f64>(&mut rng, n);
+    for exec in executors() {
+        let a = Csr::from_data(exec.clone(), &data).unwrap();
+        let b = Dense::vector(exec.clone(), &bv);
+        let solver = Gmres::new(SolverConfig::with_criterion(Criterion::residual(1e-8, 2000)))
+            .with_restart(10);
+
+        set_fused_enabled(true);
+        let mut xf = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let rf = solver.solve(&a, &b, &mut xf).unwrap();
+
+        set_fused_enabled(false);
+        let mut xc = Dense::zeros(exec.clone(), Dim2::new(n, 1));
+        let rc = solver.solve(&a, &b, &mut xc).unwrap();
+
+        let what = format!("gmres(10) on {}", exec.name());
+        assert_eq!(rf.iterations, rc.iterations, "iterations {what}");
+        assert_eq!(rf.resnorm, rc.resnorm, "resnorm {what}");
+        assert_eq!(xf.as_slice(), xc.as_slice(), "solution {what}");
+        assert!(rf.converged, "did not converge: {what}");
+    }
+    set_fused_enabled(true);
+}
+
 /// `apply_dot` (fused SpMV + dot) matches apply-then-dot for every
 /// format on every host executor, bit for bit.
 fn apply_dot_all_formats<T: Value>(seed: u64) {
